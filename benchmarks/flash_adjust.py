@@ -1,0 +1,110 @@
+"""Beyond-paper §Perf move: replace the XLA chunked-attention path with the
+Pallas flash kernel (kernels/flash_attention.py) and recompute the cell's
+roofline memory term.
+
+Method (no TPU, so structural):
+  1. lower + walk the *standalone* attention forward and forward+backward at
+     the cell's per-device/per-microbatch geometry -> measured HBM bytes of
+     the materializing path, per layer per microbatch (A_fwd, A_fwdbwd);
+  2. flash traffic for the same geometry is analytic (q/k/v/o streams; the
+     backward re-streams k/v and writes dq/dk/dv: ~4x the forward traffic,
+     still O(S));
+  3. adjusted memory term = baseline - L * accum * (A_xla - A_flash) / HBM_bw.
+
+The flash kernel itself is validated against the oracle in
+tests/test_kernels.py; this file only does the accounting.
+
+    PYTHONPATH=src:. python -m benchmarks.flash_adjust --arch qwen2-vl-7b
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.kernels.flash_attention import flash_hbm_bytes
+from repro.models.attention import gqa_attention
+from repro.perf.hlo_cost import module_cost
+from repro.perf.roofline import HW
+
+
+def attention_traffic(B, S, H, K, hd, chunk=512):
+    """Walker-measured HBM bytes of the XLA chunked attention, fwd and
+    fwd+bwd, at the given per-device geometry."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.ShapeDtypeStruct((B, S, H, hd), jnp.bfloat16)
+    k = jax.ShapeDtypeStruct((B, S, K, hd), jnp.bfloat16)
+    v = jax.ShapeDtypeStruct((B, S, K, hd), jnp.bfloat16)
+
+    def fwd(q, k, v):
+        return gqa_attention(q, k, v, causal=True, chunk=chunk).sum()
+
+    c_fwd = jax.jit(fwd).lower(q, k, v).compile()
+    a_fwd = module_cost(c_fwd.as_text()).bytes
+
+    grad = jax.grad(fwd, argnums=(0, 1, 2))
+    c_bwd = jax.jit(grad).lower(q, k, v).compile()
+    a_fwdbwd = module_cost(c_bwd.as_text()).bytes
+    return a_fwd, a_fwdbwd
+
+
+def adjust(arch: str, baseline_mem_sec: float, baseline_compute_sec: float,
+           baseline_coll_sec: float, accum: int, mesh_model: int = 16,
+           mesh_data: int = 16, global_batch: int = 256, S: int = 4096):
+    cfg = get_config(arch)
+    # per-device, per-microbatch geometry (heads over model, batch over data)
+    B_micro = max(global_batch // mesh_data // accum, 1)
+    H_loc = max(cfg.n_heads // mesh_model, 1)
+    K_loc = max(cfg.n_kv_heads // mesh_model, 1)
+    hd = cfg.hd
+
+    a_fwd, a_fwdbwd = attention_traffic(B_micro, S, H_loc, K_loc, hd)
+    # remat=full replays the forward once during the backward pass
+    a_xla_layer = a_fwdbwd + a_fwd
+
+    f_fwd = flash_hbm_bytes(B_micro, H_loc, K_loc, S, S, hd, dtype_bytes=2)
+    f_layer = 4.0 * f_fwd  # fwd + bwd(re-stream k/v, write dq/dk/dv)
+
+    L = cfg.n_layers
+    saved = L * accum * (a_xla_layer - f_layer)
+    adj_mem = baseline_mem_sec - saved / HW.hbm_bw
+    before_bound = max(baseline_mem_sec, baseline_compute_sec, baseline_coll_sec)
+    after_bound = max(adj_mem, baseline_compute_sec, baseline_coll_sec)
+    return {
+        "arch": arch,
+        "attention_xla_bytes_per_layer_micro": a_xla_layer,
+        "attention_flash_bytes_per_layer_micro": f_layer,
+        "traffic_ratio": a_xla_layer / max(f_layer, 1),
+        "memory_sec_before": baseline_mem_sec,
+        "memory_sec_after": adj_mem,
+        "bound_before": before_bound,
+        "bound_after": after_bound,
+        "speedup": before_bound / max(after_bound, 1e-12),
+        "roofline_fraction_after": baseline_compute_sec / max(after_bound, 1e-12),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-vl-7b")
+    ap.add_argument("--hillclimb-json", default=None)
+    args = ap.parse_args()
+
+    hc = args.hillclimb_json or f"results/hillclimb_{args.arch}_train_4k.json"
+    with open(hc) as f:
+        d = json.load(f)
+    base = d["baseline"]
+    accum = int(base["config"].get("accum", 8))
+    out = adjust(args.arch, base["memory_sec"], base["compute_sec"],
+                 base["collective_sec"], accum)
+    print(json.dumps(out, indent=2))
+    with open(f"results/flash_adjust_{args.arch}.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Four-learner comparison (the paper's Figs 3-6 / Sec 4 methodology):
+run the same syr2k campaign under RF / ET / GBRT / GP and report best
+objective, the evaluation it was found at, and how many evaluations were
+skipped (GP's duplicate-proposal early-finish behavior, Sec 2.2)."""
+
+from __future__ import annotations
+
+from benchmarks.common import EVALS
+from repro.core import TimingEvaluator, compare_learners
+from repro.kernels import ref as R
+from repro.kernels import variants as V
+from repro.kernels.spaces import kernel_space
+
+
+def learner_comparison(max_evals: int | None = None):
+    N, M = 192, 160
+    C, A, B = R.init_syr2k(N, M)
+    factory = V.syr2k_host((C, A, B))
+    ev = TimingEvaluator(factory, repeats=2, warmup=1)
+    results = compare_learners(
+        kernel_space("syr2k", target="host"), ev,
+        max_evals=max_evals or EVALS, seed=1234,
+    )
+    rows = []
+    for learner, res in results.items():
+        b = res.best
+        rows.append((
+            f"learners_syr2k/{learner}",
+            b.objective * 1e6,
+            f"at_eval={b.index};evaluated={res.n_evaluated};"
+            f"skipped_dups={res.n_skipped};config={b.config}",
+        ))
+    return rows

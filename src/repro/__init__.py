@@ -1,0 +1,6 @@
+"""repro: Bayesian-optimization schedule autotuning for JAX/Pallas on TPU —
+a reproduction and TPU-native extension of Wu et al., "Autotuning PolyBench
+Benchmarks with LLVM Clang/Polly Loop Optimization Pragmas Using Bayesian
+Optimization" (2020)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""repro.ckpt — msgpack+zstd checkpointing with async save and resume."""
+
+from repro.ckpt.checkpoint import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

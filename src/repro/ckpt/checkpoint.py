@@ -1,0 +1,124 @@
+"""Checkpointing: msgpack+zstd pytree snapshots with atomic rename, async
+save, and step-addressed resume — the train-loop half of fault tolerance
+(the autotuner's half is the performance database, which is its own resume
+log)."""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+__all__ = ["save", "restore", "AsyncCheckpointer", "latest_step"]
+
+_MAGIC = "repro-ckpt-v1"
+
+
+def _pack_leaf(x):
+    a = np.asarray(x)
+    # msgpack can't carry bf16 natively; view as uint16 with a dtype tag
+    if a.dtype == jnp.bfloat16:
+        return {"d": "bfloat16", "s": a.shape, "b": a.view(np.uint16).tobytes()}
+    return {"d": a.dtype.str, "s": a.shape, "b": a.tobytes()}
+
+
+def _unpack_leaf(rec):
+    if rec["d"] == "bfloat16":
+        a = np.frombuffer(rec["b"], np.uint16).reshape(rec["s"])
+        return jnp.asarray(a.view(jnp.bfloat16))
+    return np.frombuffer(rec["b"], np.dtype(rec["d"])).reshape(rec["s"])
+
+
+def save(path: str, tree, step: int, *, meta: dict | None = None,
+         level: int = 3) -> str:
+    """Write <path>/step_<n>/ with shard payload + metadata; atomic rename."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = msgpack.packb(
+        {"magic": _MAGIC, "leaves": [_pack_leaf(x) for x in leaves]},
+        use_bin_type=True)
+    payload = zstandard.ZstdCompressor(level=level).compress(payload)
+
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    with open(os.path.join(tmp, "shard_0.msgpack.zst"), "wb") as f:
+        f.write(payload)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "meta": meta or {}}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, tree_template, step: int | None = None):
+    """Restore into the structure of ``tree_template`` (shapes validated)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "shard_0.msgpack.zst"), "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    obj = msgpack.unpackb(payload, raw=False)
+    assert obj["magic"] == _MAGIC, "corrupt checkpoint"
+    leaves, treedef = jax.tree_util.tree_flatten(tree_template)
+    rec = obj["leaves"]
+    if len(rec) != len(leaves):
+        raise ValueError(f"leaf count mismatch: ckpt {len(rec)} vs template {len(leaves)}")
+    out = []
+    for r, tmpl in zip(rec, leaves):
+        a = _unpack_leaf(r)
+        if tuple(a.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(f"shape mismatch {a.shape} vs {np.shape(tmpl)}")
+        out.append(a)
+    return treedef.unflatten(out), step
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint serialization with training (one in flight)."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._pool = cf.ThreadPoolExecutor(max_workers=1)
+        self._pending: cf.Future | None = None
+
+    def save(self, tree, step: int, meta: dict | None = None):
+        self.wait()
+        # device->host copy happens on the caller thread (consistent snapshot)
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        self._pending = self._pool.submit(self._do_save, host_tree, step, meta)
+
+    def _do_save(self, host_tree, step, meta):
+        save(self.path, host_tree, step, meta=meta)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.path)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None

@@ -1,0 +1,48 @@
+"""repro.core — the paper's contribution: a Bayesian-optimization autotuner
+for JAX/Pallas program schedules (ytopt-lineage, rebuilt for TPU targets)."""
+
+from repro.core.acquisition import expected_improvement, lcb, make_acquisition
+from repro.core.database import PerformanceDatabase, Record
+from repro.core.findmin import find_min, importance_report
+from repro.core.plopper import (
+    PENALTY,
+    CostModelEvaluator,
+    DeadlineEvaluator,
+    EvalResult,
+    TimingEvaluator,
+)
+from repro.core.search import BayesianSearch, SearchResult, run_search
+from repro.core.space import (
+    Categorical,
+    ConfigurationSpace,
+    Constant,
+    EqualsCondition,
+    Float,
+    ForbiddenClause,
+    InCondition,
+    Integer,
+    Ordinal,
+    config_key,
+)
+from repro.core.surrogates import (
+    LEARNERS,
+    ExtraTrees,
+    GaussianProcess,
+    GradientBoostedTrees,
+    RandomForest,
+    RegressionTree,
+    make_learner,
+)
+from repro.core.tuner import autotune, compare_learners
+
+__all__ = [
+    "Categorical", "ConfigurationSpace", "Constant", "EqualsCondition", "Float",
+    "ForbiddenClause", "InCondition", "Integer", "Ordinal", "config_key",
+    "RegressionTree", "RandomForest", "ExtraTrees", "GradientBoostedTrees",
+    "GaussianProcess", "make_learner", "LEARNERS",
+    "lcb", "expected_improvement", "make_acquisition",
+    "PerformanceDatabase", "Record",
+    "EvalResult", "TimingEvaluator", "CostModelEvaluator", "DeadlineEvaluator", "PENALTY",
+    "BayesianSearch", "SearchResult", "run_search",
+    "autotune", "compare_learners", "find_min", "importance_report",
+]

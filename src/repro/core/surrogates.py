@@ -1,0 +1,377 @@
+"""The paper's four supervised learners, implemented from scratch on numpy.
+
+ytopt (via scikit-optimize) offers Random Forests (RF, the default), Extra
+Trees (ET), Gradient-Boosted Regression Trees (GBRT), and Gaussian Processes
+(GP) as Bayesian-optimization surrogates. No sklearn exists in this container,
+so we implement the four models directly; each exposes
+
+    fit(X, y)                      X: (n, d) float array, y: (n,)
+    predict(X) -> (mu, sigma)      per-point mean and uncertainty
+
+Uncertainty sources mirror scikit-optimize's choices:
+  * RF / ET  — spread across ensemble members,
+  * GBRT     — three quantile-loss ensembles (0.16 / 0.50 / 0.84),
+  * GP       — exact posterior variance (RBF kernel + noise, Cholesky).
+
+All fits at autotuning scale (n <= a few hundred, d <= ~100) are millisecond-
+level, so clarity wins over micro-optimization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "RegressionTree",
+    "RandomForest",
+    "ExtraTrees",
+    "GradientBoostedTrees",
+    "GaussianProcess",
+    "make_learner",
+    "LEARNERS",
+]
+
+
+# ---------------------------------------------------------------------------
+# CART regression tree (variance-reduction splits)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: "_Node | None" = None
+    right: "_Node | None" = None
+    value: float = 0.0
+    is_leaf: bool = True
+
+
+class RegressionTree:
+    """CART with MSE (variance-reduction) splits.
+
+    ``splitter='best'`` scans candidate thresholds per feature (RF / GBRT);
+    ``splitter='random'`` draws one uniform threshold per feature (Extra Trees).
+    """
+
+    def __init__(
+        self,
+        max_depth: int = 12,
+        min_samples_split: int = 2,
+        min_samples_leaf: int = 1,
+        max_features: float | str | None = None,
+        splitter: str = "best",
+        rng: np.random.Generator | None = None,
+    ):
+        self.max_depth = max_depth
+        self.min_samples_split = min_samples_split
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.splitter = splitter
+        self.rng = rng or np.random.default_rng(0)
+        self.root: _Node | None = None
+
+    # -- fitting --------------------------------------------------------------
+
+    def _n_features_to_try(self, d: int) -> int:
+        mf = self.max_features
+        if mf is None or mf == 1.0:
+            return d
+        if mf == "sqrt":
+            return max(1, int(np.sqrt(d)))
+        if mf == "log2":
+            return max(1, int(np.log2(d))) if d > 1 else 1
+        if isinstance(mf, float):
+            return max(1, int(mf * d))
+        return d
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RegressionTree":
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        self.root = self._build(X, y, depth=0)
+        return self
+
+    def _build(self, X: np.ndarray, y: np.ndarray, depth: int) -> _Node:
+        node = _Node(value=float(y.mean()), is_leaf=True)
+        n, d = X.shape
+        if (
+            depth >= self.max_depth
+            or n < self.min_samples_split
+            or n < 2 * self.min_samples_leaf
+            or np.allclose(y, y[0])
+        ):
+            return node
+
+        feats = self.rng.permutation(d)[: self._n_features_to_try(d)]
+        best = None  # (score, feature, threshold, mask)
+        for f in feats:
+            col = X[:, f]
+            lo, hi = col.min(), col.max()
+            if lo == hi:
+                continue
+            if self.splitter == "random":
+                thresholds = [self.rng.uniform(lo, hi)]
+            else:
+                uniq = np.unique(col)
+                mids = (uniq[1:] + uniq[:-1]) / 2.0
+                if len(mids) > 32:  # cap threshold scan; plenty at tuning scale
+                    mids = mids[np.linspace(0, len(mids) - 1, 32).astype(int)]
+                thresholds = mids
+            for t in thresholds:
+                mask = col <= t
+                nl = int(mask.sum())
+                nr = n - nl
+                if nl < self.min_samples_leaf or nr < self.min_samples_leaf:
+                    continue
+                yl, yr = y[mask], y[~mask]
+                score = nl * yl.var() + nr * yr.var()  # SSE up to constants
+                if best is None or score < best[0]:
+                    best = (score, f, t, mask)
+
+        if best is None:
+            return node
+        _, f, t, mask = best
+        node.is_leaf = False
+        node.feature = int(f)
+        node.threshold = float(t)
+        node.left = self._build(X[mask], y[mask], depth + 1)
+        node.right = self._build(X[~mask], y[~mask], depth + 1)
+        return node
+
+    # -- prediction -------------------------------------------------------------
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        out = np.empty(len(X))
+        for i, x in enumerate(X):
+            node = self.root
+            while not node.is_leaf:
+                node = node.left if x[node.feature] <= node.threshold else node.right
+            out[i] = node.value
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Random Forest / Extra Trees
+# ---------------------------------------------------------------------------
+
+
+class RandomForest:
+    """Bagged CART ensemble; sigma = std across member predictions."""
+
+    name = "RF"
+    bootstrap = True
+    splitter = "best"
+    max_features: float | str = "sqrt"
+
+    def __init__(self, n_estimators: int = 32, max_depth: int = 12, seed: int = 0,
+                 min_samples_leaf: int = 1):
+        self.n_estimators = n_estimators
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.rng = np.random.default_rng(seed)
+        self.trees: list[RegressionTree] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        n = len(X)
+        self.trees = []
+        for _ in range(self.n_estimators):
+            if self.bootstrap:
+                idx = self.rng.integers(0, n, size=n)
+            else:
+                idx = np.arange(n)
+            tree = RegressionTree(
+                max_depth=self.max_depth,
+                max_features=self.max_features,
+                splitter=self.splitter,
+                min_samples_leaf=self.min_samples_leaf,
+                rng=np.random.default_rng(int(self.rng.integers(2**31))),
+            )
+            tree.fit(X[idx], y[idx])
+            self.trees.append(tree)
+        return self
+
+    def predict(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        preds = np.stack([t.predict(X) for t in self.trees])  # (T, n)
+        mu = preds.mean(axis=0)
+        sigma = preds.std(axis=0) + 1e-9
+        return mu, sigma
+
+
+class ExtraTrees(RandomForest):
+    """Extremely-randomized trees: no bootstrap, random split thresholds."""
+
+    name = "ET"
+    bootstrap = False
+    splitter = "random"
+    max_features = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Gradient-boosted regression trees with quantile loss
+# ---------------------------------------------------------------------------
+
+
+class _QuantileGBT:
+    """One boosted ensemble minimizing pinball loss at quantile ``alpha``."""
+
+    def __init__(self, alpha: float, n_estimators: int, lr: float, max_depth: int, seed: int):
+        self.alpha = alpha
+        self.n_estimators = n_estimators
+        self.lr = lr
+        self.max_depth = max_depth
+        self.rng = np.random.default_rng(seed)
+        self.base = 0.0
+        self.trees: list[RegressionTree] = []
+
+    def fit(self, X, y):
+        self.base = float(np.quantile(y, self.alpha))
+        pred = np.full(len(y), self.base)
+        self.trees = []
+        for _ in range(self.n_estimators):
+            resid = y - pred
+            # negative gradient of pinball loss
+            grad = np.where(resid > 0, self.alpha, self.alpha - 1.0)
+            tree = RegressionTree(
+                max_depth=self.max_depth,
+                rng=np.random.default_rng(int(self.rng.integers(2**31))),
+            )
+            tree.fit(X, grad)
+            # line-search-free step (standard GBM-with-quantile shortcut):
+            # refit leaf values to the quantile of residuals they cover
+            self._requantile_leaves(tree.root, X, resid, np.arange(len(y)))
+            step = tree.predict(X)
+            pred = pred + self.lr * step
+            self.trees.append(tree)
+        return self
+
+    def _requantile_leaves(self, node: _Node, X, resid, idx):
+        if node.is_leaf:
+            node.value = float(np.quantile(resid[idx], self.alpha)) if len(idx) else 0.0
+            return
+        mask = X[idx, node.feature] <= node.threshold
+        self._requantile_leaves(node.left, X, resid, idx[mask])
+        self._requantile_leaves(node.right, X, resid, idx[~mask])
+
+    def predict(self, X):
+        out = np.full(len(X), self.base)
+        for tree in self.trees:
+            out = out + self.lr * tree.predict(X)
+        return out
+
+
+class GradientBoostedTrees:
+    """skopt-style GBRT surrogate: quantile ensembles at 0.16 / 0.50 / 0.84."""
+
+    name = "GBRT"
+
+    def __init__(self, n_estimators: int = 64, lr: float = 0.15, max_depth: int = 4, seed: int = 0):
+        self.models = {
+            a: _QuantileGBT(a, n_estimators, lr, max_depth, seed + i)
+            for i, a in enumerate((0.16, 0.50, 0.84))
+        }
+
+    def fit(self, X, y):
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        for m in self.models.values():
+            m.fit(X, y)
+        return self
+
+    def predict(self, X):
+        X = np.asarray(X, dtype=np.float64)
+        lo = self.models[0.16].predict(X)
+        mid = self.models[0.50].predict(X)
+        hi = self.models[0.84].predict(X)
+        sigma = np.maximum((hi - lo) / 2.0, 1e-9)
+        return mid, sigma
+
+
+# ---------------------------------------------------------------------------
+# Gaussian process (RBF + white noise, exact Cholesky inference)
+# ---------------------------------------------------------------------------
+
+
+class GaussianProcess:
+    """Exact GP regression; length-scale picked by marginal likelihood over a
+    small log grid (no gradient optimizer needed at n<=500)."""
+
+    name = "GP"
+
+    def __init__(self, length_scales=(0.1, 0.2, 0.5, 1.0, 2.0, 5.0), noise: float = 1e-4,
+                 seed: int = 0):
+        self.length_scales = tuple(length_scales)
+        self.noise = noise
+        self._X = None
+        self._alpha = None
+        self._L = None
+        self._ls = 1.0
+        self._amp = 1.0
+        self._ymean = 0.0
+        self._ystd = 1.0
+
+    @staticmethod
+    def _k(X1, X2, ls):
+        d2 = ((X1[:, None, :] - X2[None, :, :]) ** 2).sum(-1)
+        return np.exp(-0.5 * d2 / (ls * ls))
+
+    def fit(self, X, y):
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        self._ymean = float(y.mean())
+        self._ystd = float(y.std()) or 1.0
+        yn = (y - self._ymean) / self._ystd
+        n = len(X)
+        best = None
+        for ls in self.length_scales:
+            K = self._k(X, X, ls) + (self.noise + 1e-10) * np.eye(n)
+            try:
+                L = np.linalg.cholesky(K)
+            except np.linalg.LinAlgError:
+                continue
+            alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+            # log marginal likelihood (up to constants)
+            lml = -0.5 * yn @ alpha - np.log(np.diag(L)).sum()
+            if best is None or lml > best[0]:
+                best = (lml, ls, L, alpha)
+        if best is None:  # fully degenerate data
+            ls = self.length_scales[-1]
+            K = self._k(X, X, ls) + 1e-2 * np.eye(n)
+            L = np.linalg.cholesky(K)
+            alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+            best = (0.0, ls, L, alpha)
+        _, self._ls, self._L, self._alpha = best
+        self._X = X
+        return self
+
+    def predict(self, X):
+        X = np.asarray(X, dtype=np.float64)
+        Ks = self._k(X, self._X, self._ls)  # (m, n)
+        mu = Ks @ self._alpha
+        v = np.linalg.solve(self._L, Ks.T)  # (n, m)
+        var = np.maximum(1.0 - (v**2).sum(axis=0), 1e-12)
+        return mu * self._ystd + self._ymean, np.sqrt(var) * self._ystd + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+LEARNERS = ("RF", "ET", "GBRT", "GP")
+
+
+def make_learner(name: str, seed: int = 0):
+    name = name.upper()
+    if name == "RF":
+        return RandomForest(seed=seed)
+    if name == "ET":
+        return ExtraTrees(seed=seed)
+    if name == "GBRT":
+        return GradientBoostedTrees(seed=seed)
+    if name == "GP":
+        return GaussianProcess(seed=seed)
+    raise ValueError(f"unknown learner {name!r}; options: {LEARNERS}")

@@ -1,0 +1,5 @@
+"""repro.data — synthetic sharded token pipeline."""
+
+from repro.data.pipeline import SyntheticLM, make_batch
+
+__all__ = ["SyntheticLM", "make_batch"]

@@ -1,0 +1,61 @@
+"""Synthetic sharded token pipeline.
+
+Deterministic (seeded counter-based) token generation with document packing,
+sliced per data-parallel shard the way a multi-host input pipeline would
+slice a global batch: each host materializes only its shard and the global
+array is assembled with jax.make_array_from_single_device_arrays semantics
+(single-process here, so device_put with the batch NamedSharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticLM", "make_batch"]
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Packed-documents LM stream: documents of random length separated by
+    EOS, labels = next token (shifted), deterministic in (seed, step)."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    eos_id: int = 1
+    mean_doc_len: int = 256
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        B, S = self.global_batch, self.seq_len
+        toks = rng.integers(2, self.vocab_size, size=(B, S + 1), dtype=np.int32)
+        # stamp EOS at geometric document boundaries (packing)
+        p = 1.0 / max(self.mean_doc_len, 2)
+        eos_mask = rng.random((B, S + 1)) < p
+        toks = np.where(eos_mask, self.eos_id, toks)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_batch(stream: SyntheticLM, step: int, shardings=None) -> dict:
+    """Materialize the batch, placed per the given NamedSharding tree."""
+    host = stream.batch_at(step)
+    if shardings is None:
+        return {k: jnp.asarray(v) for k, v in host.items()}
+    return {
+        k: jax.device_put(v, shardings[k]) for k, v in host.items()
+    }

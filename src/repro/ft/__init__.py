@@ -1,0 +1,11 @@
+"""repro.ft — fault tolerance: gradient compression (error feedback),
+elastic mesh planning, straggler monitoring. Evaluation-campaign fault
+tolerance (penalty-on-failure, deadline) lives in repro.core.plopper; search
+resume lives in repro.core.database."""
+
+from repro.ft.compression import compressed_psum, dequantize, ef_compress_grads, quantize
+from repro.ft.elastic import LADDER, MeshPlan, plan_mesh
+from repro.ft.straggler import StragglerMonitor
+
+__all__ = ["compressed_psum", "dequantize", "ef_compress_grads", "quantize",
+           "LADDER", "MeshPlan", "plan_mesh", "StragglerMonitor"]

@@ -1,0 +1,74 @@
+"""Gradient compression with error feedback for cross-pod all-reduce.
+
+The wire trick: quantize the gradient to a low-precision payload *before*
+the data-parallel all-reduce and keep the quantization residual locally
+(error feedback), adding it back before the next step's quantization. With
+bf16 payloads the HLO all-reduce moves half the bytes of f32; int8 moves a
+quarter. Exposed as a shard_map-based DP reducer so the collective dtype is
+explicit in the lowered HLO (visible to the roofline's collective parser).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["quantize", "dequantize", "compressed_psum", "ef_compress_grads"]
+
+
+def quantize(x: jnp.ndarray, dtype=jnp.int8):
+    """Symmetric per-tensor quantization. Returns (payload, scale)."""
+    if dtype == jnp.bfloat16:
+        return x.astype(jnp.bfloat16), jnp.ones((), jnp.float32)
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    if q.dtype == jnp.bfloat16:
+        return q.astype(jnp.float32)
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, dtype=jnp.int8):
+    """All-reduce with a genuinely compressed wire payload (inside shard_map).
+
+    int8 path: agree on a global scale (pmax of local maxima), pre-divide by
+    the shard count so the int8 sum cannot overflow, and psum *in int8* —
+    1 byte/param on the wire (4x less than f32). The pre-division costs
+    log2(N) bits of precision, which the error-feedback residual
+    (ef_compress_grads) re-injects on later steps."""
+    if dtype == jnp.bfloat16:
+        q = x.astype(jnp.bfloat16)
+        return jax.lax.psum(q, axis_name).astype(jnp.float32)
+    n = jax.lax.axis_size(axis_name)
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    gmax = jax.lax.pmax(amax, axis_name)
+    scale = gmax / 127.0
+    # pre-scaled so the N-shard sum stays within the int8 range
+    q = jnp.clip(jnp.round(x / (scale * n)), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q, axis_name)  # int8 payload on the wire
+    return total.astype(jnp.float32) * (scale * n)
+
+
+def ef_compress_grads(grads, residual, dtype=jnp.int8):
+    """Error-feedback step (local half): g' = Q(g + r); r' = g + r - g'.
+
+    The caller all-reduces the quantized payload; this function keeps the
+    bookkeeping pure so it can live inside a jitted train step."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize(g32, dtype)
+        deq = dequantize(q, scale)
+        return deq, g32 - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])

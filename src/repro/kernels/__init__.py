@@ -1,0 +1,32 @@
+"""repro.kernels — PolyBench-analog TPU hot spots (Pallas + BlockSpec).
+
+Layout per kernel: <name>.py holds the pl.pallas_call implementation;
+ops.py the jit'd public wrappers; ref.py the pure-jnp oracles; spaces.py the
+autotuner parameter spaces; variants.py the host-timeable XLA molds.
+"""
+
+from repro.kernels.covariance import covariance
+from repro.kernels.floyd_warshall import floyd_warshall, minplus_update
+from repro.kernels.heat3d import heat3d, heat3d_step
+from repro.kernels.lu import lu
+from repro.kernels.m3mm import mm3
+from repro.kernels.matmul import tiled_matmul
+from repro.kernels.ops import (
+    DEFAULTS,
+    covariance_op,
+    floyd_warshall_op,
+    heat3d_op,
+    lu_op,
+    matmul_op,
+    mm3_op,
+    syr2k_op,
+)
+from repro.kernels.spaces import KERNEL_SPACES, kernel_space
+from repro.kernels.syr2k import syr2k
+
+__all__ = [
+    "covariance", "floyd_warshall", "minplus_update", "heat3d", "heat3d_step",
+    "lu", "mm3", "tiled_matmul", "syr2k",
+    "DEFAULTS", "covariance_op", "floyd_warshall_op", "heat3d_op", "lu_op",
+    "matmul_op", "mm3_op", "syr2k_op", "KERNEL_SPACES", "kernel_space",
+]

@@ -1,0 +1,46 @@
+"""3mm Pallas pipeline: G = (A@B) @ (C@D), Sec. 4.2.
+
+Three tiled-matmul invocations sharing one tile triple (bm, bn, bk) — the
+paper's 3mm space is exactly 7 binary pragma choices x 3 shared tile ordinals
+(2^7 * 11^3 = 170,368 configurations). The 7 binaries here: per-matmul
+``pack`` (3), per-matmul ``interchange`` (3), and ``fuse_second`` which keeps
+E = A@B resident and feeds it straight into the third product without a
+round trip through HBM at full precision (f32 -> input dtype cast skipped).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.matmul import tiled_matmul
+
+__all__ = ["mm3"]
+
+
+def mm3(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    pack1: bool = True,
+    pack2: bool = True,
+    pack3: bool = True,
+    inter1: bool = False,
+    inter2: bool = False,
+    inter3: bool = False,
+    fuse_second: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    E = tiled_matmul(A, B, bm=bm, bn=bn, bk=bk, pack=pack1, interchange=inter1,
+                     out_dtype=jnp.float32 if fuse_second else None,
+                     interpret=interpret)
+    F = tiled_matmul(C, D, bm=bm, bn=bn, bk=bk, pack=pack2, interchange=inter2,
+                     out_dtype=jnp.float32 if fuse_second else None,
+                     interpret=interpret)
+    G = tiled_matmul(E, F, bm=bm, bn=bn, bk=bk, pack=pack3, interchange=inter3,
+                     out_dtype=A.dtype, interpret=interpret)
+    return G

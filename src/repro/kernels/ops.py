@@ -1,0 +1,83 @@
+"""Public jit'd entry points for the six PolyBench-analog kernels.
+
+Each op takes an optional ``config`` dict in the same schema the autotuner
+searches (see spaces.py), defaulting to the VMEM/MXU-derived defaults (the
+TPU analog of the paper's cache-derived (96, 2048, 256) defaults).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+# NB: resolve the submodules via importlib — the package __init__ re-exports
+# same-named functions, which shadow plain `import repro.kernels.x as _x`
+# (the `as` form reads the package attribute, which is the function)
+import importlib
+
+_cov = importlib.import_module("repro.kernels.covariance")
+_fw = importlib.import_module("repro.kernels.floyd_warshall")
+_heat = importlib.import_module("repro.kernels.heat3d")
+_lu = importlib.import_module("repro.kernels.lu")
+_m3 = importlib.import_module("repro.kernels.m3mm")
+_mm = importlib.import_module("repro.kernels.matmul")
+_sy = importlib.import_module("repro.kernels.syr2k")
+
+__all__ = [
+    "matmul_op", "syr2k_op", "mm3_op", "lu_op", "heat3d_op", "covariance_op",
+    "floyd_warshall_op", "DEFAULTS",
+]
+
+DEFAULTS: dict[str, dict[str, Any]] = {
+    "matmul": dict(bm=128, bn=128, bk=128, interchange=False, pack=True),
+    "syr2k": dict(bi=128, bj=128, bk=128, interchange=False,
+                  pack_a=False, pack_b=False),
+    "mm3": dict(bm=128, bn=128, bk=128, pack1=True, pack2=True, pack3=True,
+                inter1=False, inter2=False, inter3=False, fuse_second=False),
+    "lu": dict(bs=32, bm=128, bn=128, pack=True),
+    "heat3d": dict(bi=8, fuse_t=1),
+    "covariance": dict(bi=128, bj=128, bk=256, fuse_center=True, interchange=False),
+    "floyd_warshall": dict(bs=64, bi=128, bj=128, unroll=1),
+}
+
+
+def _merged(name: str, config: Mapping[str, Any] | None) -> dict:
+    out = dict(DEFAULTS[name])
+    if config:
+        out.update({k: v for k, v in config.items() if k in out})
+    return out
+
+
+def matmul_op(a, b, config=None, interpret=None):
+    return _mm.tiled_matmul(a, b, **_merged("matmul", config), interpret=interpret)
+
+
+def syr2k_op(C, A, B, alpha=1.5, beta=1.2, config=None, interpret=None):
+    return _sy.syr2k(C, A, B, alpha, beta, **_merged("syr2k", config),
+                     interpret=interpret)
+
+
+def mm3_op(A, B, C, D, config=None, interpret=None):
+    return _m3.mm3(A, B, C, D, **_merged("mm3", config), interpret=interpret)
+
+
+def lu_op(A, config=None, interpret=None):
+    return _lu.lu(A, **_merged("lu", config), interpret=interpret)
+
+
+def heat3d_op(A, tsteps, config=None, interpret=None):
+    return _heat.heat3d(A, tsteps, **_merged("heat3d", config), interpret=interpret)
+
+
+def covariance_op(data, config=None, interpret=None):
+    return _cov.covariance(data, **_merged("covariance", config), interpret=interpret)
+
+
+def floyd_warshall_op(path, config=None, interpret=None):
+    return _fw.floyd_warshall(
+        path, **_merged("floyd_warshall", config),
+        allow_semiring_reassociation=True, interpret=interpret,
+    )

@@ -1,0 +1,45 @@
+"""Shared kernel utilities: padding, interpret-mode policy, alignment."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["default_interpret", "cdiv", "pad_to", "unpad", "TPU_LANE", "TPU_SUBLANE"]
+
+TPU_LANE = 128     # last-dim tile of the TPU vector unit / MXU
+TPU_SUBLANE = 8    # second-to-last-dim tile (f32)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run in interpret mode unless a real TPU is attached.
+
+    Override with REPRO_PALLAS_INTERPRET=0/1.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: jnp.ndarray, multiples: tuple[int, ...], value: float = 0.0) -> jnp.ndarray:
+    """Zero-pad each dim of ``x`` up to the next multiple of ``multiples``."""
+    pads = []
+    for dim, m in zip(x.shape, multiples):
+        target = cdiv(dim, m) * m
+        pads.append((0, target - dim))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def unpad(x: jnp.ndarray, shape: tuple[int, ...]) -> jnp.ndarray:
+    if tuple(x.shape) == tuple(shape):
+        return x
+    return x[tuple(slice(0, s) for s in shape)]

@@ -1,0 +1,5 @@
+"""repro.launch — mesh construction, dry-run, training/serving/autotuning CLIs."""
+
+from repro.launch.mesh import make_mesh_from_plan, make_production_mesh
+
+__all__ = ["make_mesh_from_plan", "make_production_mesh"]

@@ -1,0 +1,66 @@
+"""Autotuning CLI — the paper's ytopt interface (--max-evals / --learner).
+
+    PYTHONPATH=src python -m repro.launch.autotune --kernel syr2k \
+        --max-evals 30 --learner RF --db results/syr2k_rf
+
+Kernels are tuned on the host-timed backend (B1) at bench sizes; pass
+--backend cost for the TPU-model backend (B2) at paper LARGE sizes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import EvalResult, TimingEvaluator, autotune
+from repro.core.findmin import importance_report
+from repro.kernels import ref as R
+from repro.kernels import variants as V
+from repro.kernels.spaces import KERNEL_SPACES, kernel_space
+
+BENCH_PROBLEMS = {
+    "syr2k": lambda: (V.syr2k_host(R.init_syr2k(240, 200)), None),
+    "mm3": lambda: (V.mm3_host(R.init_mm3(200, 180, 160, 150, 170)), None),
+    "lu": lambda: (V.lu_host(R.init_lu(256)), None),
+    "heat3d": lambda: (V.heat3d_host(R.init_heat3d(40), tsteps=8), None),
+    "covariance": lambda: (V.covariance_host(R.init_covariance(300, 240)), None),
+    "floyd_warshall": lambda: (V.floyd_warshall_host(R.init_floyd_warshall(240)), None),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", required=True, choices=sorted(KERNEL_SPACES))
+    ap.add_argument("--max-evals", type=int, default=100,
+                    help="evaluation budget (paper default: 100; paper runs: 200)")
+    ap.add_argument("--learner", default="RF", choices=["RF", "ET", "GBRT", "GP"])
+    ap.add_argument("--backend", default="host", choices=["host", "cost"])
+    ap.add_argument("--db", default=None, help="performance database directory")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args(argv)
+
+    if args.backend == "host":
+        factory, _ = BENCH_PROBLEMS[args.kernel]()
+        evaluator = TimingEvaluator(factory, repeats=2, warmup=1)
+        space = kernel_space(args.kernel, target="host", seed=args.seed)
+    else:
+        from benchmarks.pallas_tuning import LARGE_SHAPES, make_evaluator
+        evaluator = make_evaluator(args.kernel)
+        space = kernel_space(args.kernel, target="tpu", seed=args.seed)
+
+    res = autotune(space, evaluator, max_evals=args.max_evals,
+                   learner=args.learner, seed=args.seed, db_path=args.db)
+    print(res.summary())
+    print(json.dumps({
+        "best_config": res.best.config,
+        "best_objective_sec": res.best.objective,
+        "found_at_eval": res.best.index,
+        "importance": importance_report(res.db),
+    }, indent=2, default=str))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,229 @@
+"""Dry-run cells: input specs (ShapeDtypeStruct stand-ins) and lowering per
+(architecture x shape x mesh) — shared by dryrun.py, the roofline harness,
+and the distributed-config autotuner.
+
+``lower_cell`` builds the jitted step with fully-specified in_shardings and
+returns the (lowered, chips, model_flops) triple; nothing is allocated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, cell_supported, get_config
+from repro.models.common import ArchConfig
+from repro.models.model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    loss_fn,
+)
+from repro.parallel.sharding import (
+    ShardingProfile,
+    batch_specs,
+    cache_specs,
+    make_profile,
+    named,
+    param_specs,
+)
+from repro.train.optim import adamw_init
+from repro.train.step import make_train_step
+
+__all__ = ["CellPlan", "input_specs", "plan_cell", "lower_cell", "DEFAULT_KNOBS"]
+
+# per-cell tunable knobs (the distributed-config autotuner's space)
+DEFAULT_KNOBS = dict(
+    accum=1,            # gradient-accumulation microbatches
+    remat="full",       # none | dots | full
+    attn_chunk=512,     # flash-style query chunk
+    ssm_chunk=128,      # SSD chunk length
+    mla_absorb=True,    # MLA decode schedule
+    moment_dtype="float32",
+    seq_parallel=False, # shard the residual stream's seq dim over `model`
+)
+
+
+def _accum_default(cfg: ArchConfig, shape: ShapeSpec, n_data: int) -> int:
+    """Keep per-microbatch device tokens <= ~8k for the big archs."""
+    per_dev_batch = max(shape.global_batch // max(n_data, 1), 1)
+    tokens = per_dev_batch * shape.seq_len
+    if cfg.param_count() > 30e9:
+        target = 8_192
+    elif cfg.param_count() > 3e9:
+        target = 16_384
+    else:
+        target = 65_536
+    accum = 1
+    while tokens // accum > target and per_dev_batch % (accum * 2) == 0:
+        accum *= 2
+    return accum
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: ShapeSpec
+    cfg: ArchConfig
+    profile: ShardingProfile
+    knobs: dict
+    chips: int
+
+    @property
+    def kind(self) -> str:
+        return self.shape.kind
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((B, 3, S), i32)
+        if cfg.family == "audio":
+            specs["enc_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_len, cfg.d_model), cfg.dtype)
+        return specs
+    # decode: one new token against a seq-length cache
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def plan_cell(arch: str, shape_name: str, mesh: Mesh,
+              knobs: dict | None = None) -> CellPlan:
+    cfg = get_config(arch)
+    if knobs and "cfg_overrides" in knobs:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **knobs["cfg_overrides"])
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name}: {reason}")
+    profile = make_profile(mesh, shape.kind, shape.global_batch)
+    merged = dict(DEFAULT_KNOBS)
+    n_data = 1
+    for a in profile.batch_axes:
+        n_data *= mesh.shape[a]
+    merged["accum"] = _accum_default(cfg, shape, n_data)
+    if knobs:
+        merged.update(knobs)
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    return CellPlan(arch, shape, cfg, profile, merged, chips)
+
+
+def model_flops(plan: CellPlan) -> float:
+    """6*N_active*D for train; 2*N_active*D for a forward/prefill; 2*N_active
+    per token for decode."""
+    cfg = plan.cfg
+    n = cfg.active_param_count()
+    B, S = plan.shape.global_batch, plan.shape.seq_len
+    if plan.kind == "train":
+        return 6.0 * n * B * S
+    if plan.kind == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B  # decode: one token per request
+
+
+def _abstract_cache(cfg: ArchConfig, B: int, S: int):
+    return jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+
+def lower_cell(plan: CellPlan, mesh: Mesh):
+    """Lower (do not compile) the cell's step. Returns (lowered, aux) where
+    aux has chips / model_flops / spec trees for reporting."""
+    cfg, shape, profile, knobs = plan.cfg, plan.shape, plan.profile, plan.knobs
+    params_abs = abstract_params(cfg)
+    p_specs = param_specs(params_abs, mesh, profile, cfg)
+    p_shard = named(mesh, p_specs)
+    inputs = input_specs(cfg, shape)
+
+    if plan.kind == "train":
+        opt_abs = jax.eval_shape(functools.partial(
+            adamw_init, moment_dtype=jnp.dtype(knobs["moment_dtype"])), params_abs)
+        o_specs = {
+            "m": p_specs, "v": p_specs, "step": P(),
+        }
+        o_shard = named(mesh, o_specs)
+        b_specs = batch_specs(inputs, mesh, profile)
+        b_shard = named(mesh, b_specs)
+        b_axes = profile.batch_axes or None
+        sp_axis = profile.tp_axis if knobs.get("seq_parallel") else None
+        act_spec = P(b_axes, sp_axis, None)
+        logits_spec = P(b_axes, None,
+                        profile.tp_axis if cfg.vocab_size %
+                        mesh.shape[profile.tp_axis] == 0 else None)
+        step = make_train_step(cfg, accum=knobs["accum"], remat=knobs["remat"],
+                               attn_chunk=knobs["attn_chunk"],
+                               ssm_chunk=knobs["ssm_chunk"],
+                               act_spec=act_spec, logits_spec=logits_spec)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, inputs)
+    elif plan.kind == "prefill":
+        b_specs = batch_specs(inputs, mesh, profile)
+        b_shard = named(mesh, b_specs)
+
+        b_axes = profile.batch_axes or None
+
+        def prefill_fn(params, batch):
+            logits, _ = forward(
+                params, batch, cfg, remat="none",
+                attn_chunk=knobs["attn_chunk"], ssm_chunk=knobs["ssm_chunk"],
+                act_spec=P(b_axes, None, None),
+                logits_spec=P(b_axes, None,
+                              profile.tp_axis if cfg.vocab_size %
+                              mesh.shape[profile.tp_axis] == 0 else None))
+            return logits
+
+        jitted = jax.jit(prefill_fn, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = jitted.lower(params_abs, inputs)
+    else:  # decode
+        B, S = shape.global_batch, shape.seq_len
+        cache_abs = _abstract_cache(cfg, B, S)
+        c_specs = cache_specs(cache_abs, mesh, profile, cfg)
+        c_shard = named(mesh, c_specs)
+        tok_shard = named(mesh, P(profile.batch_axes or None, None))
+
+        def serve_step(params, cache, token, pos):
+            return decode_step(params, cache, token, pos, cfg,
+                               mla_absorb=knobs["mla_absorb"])
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_shard, c_shard, tok_shard, None),
+            out_shardings=(None, c_shard),
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, cache_abs, inputs["token"],
+                                   inputs["pos"])
+
+    aux = {
+        "chips": plan.chips,
+        "model_flops": model_flops(plan),
+        "arch": plan.arch,
+        "shape": shape.name,
+        "kind": plan.kind,
+        "knobs": dict(knobs),
+    }
+    return lowered, aux

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_from_plan"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_from_plan(plan):
+    """Build a mesh from an elastic MeshPlan (repro.ft.elastic)."""
+    return jax.make_mesh(plan.shape, plan.axes)

@@ -1,0 +1,56 @@
+"""Serving driver: batched greedy decoding with a prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced
+from repro.models import init_params
+from repro.serve import cache_bytes, greedy_decode
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.gen
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"cache={cache_bytes(cfg, args.batch, max_len)/1e6:.2f} MB")
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "audio":
+        kw["enc_embed"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.encoder_len, cfg.d_model))
+
+    t0 = time.time()
+    out = greedy_decode(params, cfg, prompt, steps=args.gen, max_len=max_len, **kw)
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    print(f"[serve] generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s incl. compile)")
+    print("[serve] first request ids:", out[0].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

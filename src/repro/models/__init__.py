@@ -1,0 +1,16 @@
+"""repro.models — the LM substrate for the assigned architectures."""
+
+from repro.models.common import ArchConfig
+from repro.models.model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+
+__all__ = [
+    "ArchConfig", "abstract_params", "decode_step", "forward", "init_cache",
+    "init_params", "loss_fn",
+]

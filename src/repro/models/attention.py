@@ -1,0 +1,123 @@
+"""Grouped-query attention: chunked (flash-style) training/prefill path and
+single-token decode path, with sliding-window / local-global masking.
+
+The training path scans over query chunks with an online-softmax
+accumulator, so peak memory is O(chunk * S) per head instead of O(S^2) —
+the property that makes the 32k prefill cells compile with sane
+memory_analysis and the TPU analog of flash attention's HBM-traffic shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gqa_attention", "gqa_decode", "make_positions"]
+
+_NEG = -1.0e30
+
+
+def make_positions(B: int, S: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+
+def _mask(qpos, kpos, *, causal: bool, window) -> jnp.ndarray:
+    """qpos: (Sq,), kpos: (Sk,) -> (Sq, Sk) boolean allow-mask."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        # window may be a traced scalar (per-layer, scanned); <=0 disables
+        w = jnp.asarray(window)
+        dist_ok = (qpos[:, None] - kpos[None, :]) < w
+        m &= jnp.where(w > 0, dist_ok, True)
+    return m
+
+
+def gqa_attention(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, K, hd)
+    v: jnp.ndarray,            # (B, Sk, K, hd)
+    *,
+    causal: bool = True,
+    window=None,
+    chunk: int = 512,
+    scale: float | None = None,
+    f32: bool = True,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else hd ** -0.5
+
+    qg = q.reshape(B, Sq, K, G, hd)
+    kpos = jnp.arange(Sk)
+
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    nq = qg.shape[1] // chunk
+    qc = qg.reshape(B, nq, chunk, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    cdt = jnp.float32 if f32 else q.dtype
+    neg = _NEG if f32 else -6.0e4  # bf16-safe mask value
+
+    def one_chunk(ci, qblk):
+        # qblk: (B, chunk, K, G, hd)
+        qpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qblk.astype(cdt),
+                       k.astype(cdt)) * jnp.asarray(scale, cdt)
+        m = _mask(qpos, kpos, causal=causal, window=window)
+        s = jnp.where(m[None, None, None, :, :], s, jnp.asarray(neg, cdt))
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(cdt)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(cdt))
+        return o.astype(q.dtype)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(nq), qc))          # (nq, B, chunk, K, G, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * chunk, K, G, hd)
+    if pad:
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, hd)
+
+
+def gqa_decode(
+    q: jnp.ndarray,            # (B, 1, H, hd)
+    k_cache: jnp.ndarray,      # (B, S, K, hd)
+    v_cache: jnp.ndarray,      # (B, S, K, hd)
+    cur_pos,                   # scalar: index of the new token
+    *,
+    window=None,
+    ring: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """One-token attention against a filled cache (positions <= cur_pos).
+
+    ``ring=True`` treats the cache as a circular buffer of the last S tokens
+    (windowed-KV layout: slot j holds absolute position cur_pos - ((cur_pos -
+    j) mod S)), so sliding-window archs cache O(window) instead of O(seq) —
+    how the 500k-decode cell fits."""
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale is not None else hd ** -0.5
+
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    slots = jnp.arange(S)
+    if ring:
+        kpos = cur_pos - jnp.mod(cur_pos - slots, S)   # absolute positions
+    else:
+        kpos = slots
+    valid = (kpos[None, :] <= cur_pos) & (kpos[None, :] >= 0)
+    if window is not None:
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0, (cur_pos - kpos[None, :]) < w, True)
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

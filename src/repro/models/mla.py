@@ -1,0 +1,167 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+KV state is compressed to a per-token latent (kv_lora_rank=512) plus a
+shared rotary key (qk_rope_dim=64); queries go through their own low-rank
+bottleneck (q_lora_rank). Decode supports two schedules:
+
+  * ``absorb=False`` — the faithful naive path: cached latents are
+    up-projected to per-head K/V every step (paper-equivalent reference);
+  * ``absorb=True``  — the matrix-absorption schedule: W_UK is folded into
+    the query and W_UV applied after attention, so decode attends directly
+    over the 576-wide latent cache. This is a *schedule* change with
+    identical math — exactly the class of transformation the autotuning
+    framework searches over, and one of our §Perf hillclimb moves.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm, rope
+
+__all__ = ["init_mla", "mla_attention", "mla_decode", "init_mla_cache"]
+
+_NEG = -1.0e30
+
+
+def init_mla(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora_rank), 0, dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), jnp.float32),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, H * qd), 0, dtype),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), 0, dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), jnp.float32),
+        "wkv_b": dense_init(
+            ks[3], (cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_head_dim)), 0, dtype
+        ),
+        "wo": dense_init(ks[4], (H * cfg.v_head_dim, d), 0, dtype),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = rms_norm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = rope(q[..., cfg.qk_nope_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, cfg, positions):
+    c = x @ p["wkv_a"]
+    c_kv = rms_norm(c[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = c[..., None, cfg.kv_lora_rank :]          # (B, S, 1, rope)
+    k_rope = rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _up_kv(p, c_kv, cfg):
+    B, S, _ = c_kv.shape
+    H = cfg.n_heads
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    return kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim :]  # k_nope, v
+
+
+def mla_attention(p: dict, x: jnp.ndarray, cfg, positions, chunk: int = 512) -> jnp.ndarray:
+    """Training/prefill MLA with causal masking (chunked over queries)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(p, x, cfg, positions)
+    k_nope, v = _up_kv(p, c_kv, cfg)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, cfg.qk_rope_dim))],
+        axis=-1,
+    )
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    nq = qp.shape[1] // chunk
+    qc = qp.reshape(B, nq, chunk, H, -1).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(S)
+
+    def one_chunk(ci, qblk):
+        qpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bshd->bhqs", qblk.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None], s, _NEG)
+        pr = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", pr, v.astype(jnp.float32)).astype(x.dtype)
+
+    out = jax.lax.map(lambda a: one_chunk(*a), (jnp.arange(nq), qc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * chunk, H, cfg.v_head_dim)
+    if pad:
+        out = out[:, :S]
+    return out.reshape(B, S, H * cfg.v_head_dim) @ p["wo"]
+
+
+def init_mla_cache(cfg, B: int, S: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((B, S, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((B, S, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p: dict, x: jnp.ndarray, cache: dict, cfg, pos,
+               absorb: bool = True) -> tuple[jnp.ndarray, dict]:
+    """One-token MLA decode. x: (B, 1, d); pos: scalar index."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    positions = jnp.full((B, 1), pos)
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)      # (B,1,H,*)
+    c_new, kr_new = _project_kv_latent(p, x, cfg, positions)
+
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)),
+    }
+    c_kv, k_rope = cache["c_kv"], cache["k_rope"]
+    S = c_kv.shape[1]
+    valid = jnp.arange(S)[None, :] <= pos                  # (1, S)
+
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_uk = wkv_b[..., : cfg.qk_nope_dim]                   # (lora, H, nope)
+    w_uv = wkv_b[..., cfg.qk_nope_dim :]                   # (lora, H, v)
+
+    if absorb:
+        # fold W_UK into q; attend over the latent cache directly
+        q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))       # (B,1,H,lora)
+        s = jnp.einsum("bqhl,bsl->bhqs", q_eff, c_kv.astype(jnp.float32))
+        s += jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+        s = jnp.where(valid[:, None, None, :], s * scale, _NEG)
+        pr = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhqs,bsl->bqhl", pr, c_kv.astype(jnp.float32))
+        o = jnp.einsum("bqhl,lhv->bqhv", lat, w_uv.astype(jnp.float32))
+    else:
+        # naive: up-project the whole cache each step
+        k_nope, v = _up_kv(p, c_kv, cfg)                   # (B,S,H,*)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, cfg.qk_rope_dim))], axis=-1)
+        s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        s = jnp.where(valid[:, None, None, :], s, _NEG)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshv->bqhv", pr, v.astype(jnp.float32))
+
+    out = o.reshape(B, 1, H * cfg.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, cache

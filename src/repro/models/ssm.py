@@ -1,0 +1,199 @@
+"""Mamba2 (SSD — state-space duality) block: chunked parallel form for
+training/prefill and O(1)-state recurrence for decode.
+
+The chunked SSD algorithm is a blocked matrix program (intra-chunk
+"attention-like" diagonal blocks + inter-chunk state recurrence), i.e. the
+same tiled-loop-nest shape the paper's pragmas tune — ``chunk`` is its tile
+size and is exposed to the autotuner.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+__all__ = ["init_mamba2", "mamba2_forward", "mamba2_decode", "init_ssm_cache", "ssd"]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """(..., L) -> (..., L, L); out[i, j] = sum_{j < t <= i} a[t], -inf above
+    the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(x, dt, A, B, C, chunk: int = 64, initial_state=None):
+    """Chunked state-space-dual scan.
+
+    x: (b, s, H, P); dt: (b, s, H) (already softplus'd); A: (H,) negative;
+    B, C: (b, s, N) (single group, broadcast over heads).
+    Returns (y: (b, s, H, P), final_state: (b, H, P, N)).
+    """
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+
+    f32 = jnp.float32
+    Xd = (x * dt[..., None]).astype(f32).reshape(b, c, chunk, H, P)
+    Ad = (dt * A[None, None, :]).astype(f32).reshape(b, c, chunk, H)
+    Ad = Ad.transpose(0, 3, 1, 2)                      # (b, H, c, L)
+    Bc = B.astype(f32).reshape(b, c, chunk, N)
+    Cc = C.astype(f32).reshape(b, c, chunk, N)
+
+    A_cum = jnp.cumsum(Ad, axis=-1)                    # (b, H, c, L)
+
+    # 1) intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(Ad))                        # (b, H, c, L, L)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, Lmat, Xd)
+
+    # 2) chunk-final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)    # (b, H, c, L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, Xd)
+
+    # 3) inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((b, H, P, N), f32)
+    states = jnp.concatenate([initial_state[:, None].transpose(0, 1, 2, 3, 4), states], axis=1)
+    chunk_sums = jnp.pad(A_cum[..., -1], ((0, 0), (0, 0), (1, 0)))  # (b, H, c+1)
+    decay_chunk = jnp.exp(_segsum(chunk_sums))          # (b, H, c+1, c+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    states_prev, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4) state -> output contribution
+    out_decay = jnp.exp(A_cum)                          # (b, H, c, L)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, states_prev, out_decay)
+
+    y = (Y_diag + Y_off).reshape(b, s, H, P)
+    return y.astype(x.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def _dims(d_model: int, expand: int, head_dim: int, n_state: int):
+    d_in = expand * d_model
+    H = d_in // head_dim
+    conv_dim = d_in + 2 * n_state
+    return d_in, H, conv_dim
+
+
+def init_mamba2(key, d_model: int, *, expand: int = 2, head_dim: int = 64,
+                n_state: int = 128, conv_width: int = 4, dtype=jnp.bfloat16) -> dict:
+    d_in, H, conv_dim = _dims(d_model, expand, head_dim, n_state)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * n_state + H
+    return {
+        "in_proj": dense_init(ks[0], (d_model, proj_out), 0, dtype),
+        "conv_w": dense_init(ks[1], (conv_width, conv_dim), 0, jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d_model), 0, dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_in: int, n_state: int, H: int):
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * n_state]
+    dt = zxbcdt[..., 2 * d_in + 2 * n_state :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along S. xBC: (B, S, Cd); w: (cw, Cd)."""
+    cw = w.shape[0]
+    out = xBC.astype(jnp.float32) * w[-1]
+    padded = jnp.pad(xBC.astype(jnp.float32), ((0, 0), (cw - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    for i in range(cw - 1):
+        out = out + padded[:, i : i + S, :] * w[i]
+    return jax.nn.silu(out + b).astype(xBC.dtype)
+
+
+def mamba2_forward(p: dict, x: jnp.ndarray, cfg, chunk: int = 64) -> jnp.ndarray:
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    d_in, H, conv_dim = _dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state)
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, d_in, N, H)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_in]
+    Bmat = xBC[..., d_in : d_in + N]
+    Cmat = xBC[..., d_in + N :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    B_, S_, _ = x.shape
+    xh = xs.reshape(B_, S_, H, P)
+    y, _ = ssd(xh, dt, A, Bmat, Cmat, chunk=chunk)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)
+
+    y = y.reshape(B_, S_, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode path (single token, recurrent)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg, B: int, dtype=jnp.float32) -> dict:
+    d_in, H, conv_dim = _dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state)
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((B, H, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, cache: dict, cfg) -> tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d_model); cache: {conv: (B, cw-1, Cd), ssm: (B, H, P, N)}."""
+    d_in, H, conv_dim = _dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    B_ = x.shape[0]
+
+    zxbcdt = (x @ p["in_proj"])[:, 0, :]                       # (B, proj)
+    z, xBC, dt = _split_proj(zxbcdt, d_in, N, H)
+
+    window = jnp.concatenate([cache["conv"], xBC[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs = xBC[..., :d_in]
+    Bmat = xBC[..., d_in : d_in + N]                            # (B, N)
+    Cmat = xBC[..., d_in + N :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                # (B, H)
+
+    xh = xs.reshape(B_, H, P).astype(jnp.float32)
+    contrib = dt[..., None, None] * xh[..., None] * Bmat[:, None, None, :]
+    new_ssm = cache["ssm"] * dA[..., None, None] + contrib       # (B, H, P, N)
+
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cmat.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)[:, None, :], p["norm"])
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": new_ssm}

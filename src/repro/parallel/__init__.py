@@ -1,0 +1,16 @@
+"""repro.parallel — sharding rules and collective utilities."""
+
+from repro.parallel.sharding import (
+    ShardingProfile,
+    batch_specs,
+    cache_specs,
+    make_profile,
+    mesh_axis_size,
+    named,
+    param_specs,
+)
+
+__all__ = [
+    "ShardingProfile", "batch_specs", "cache_specs", "make_profile",
+    "mesh_axis_size", "named", "param_specs",
+]

@@ -1,0 +1,229 @@
+"""Sharding rules: logical layout -> NamedSharding for params, batches,
+optimizer state, and caches, per mesh and per shape-kind profile.
+
+Layout policy (1000+-node posture):
+
+  * ``model`` axis — tensor parallelism: attention heads / FFN columns /
+    expert hidden dims / vocab (Megatron 2-collective pattern);
+  * ``data`` (+ ``pod``) axes — batch parallelism AND parameter storage
+    sharding (FSDP/ZeRO-3): weight matrices shard their contraction dim over
+    the fsdp axes, XLA SPMD inserts the all-gathers at use and reduce-
+    scatters on the gradients. Optimizer state inherits the param sharding
+    (ZeRO);
+  * experts shard over the largest divisible combination of (pod, data),
+    falling back to FSDP on d_model when E doesn't divide (mixtral's 8
+    experts on a 16-wide data axis);
+  * decode profiles shard batch over (pod, data); the batch=1 long-context
+    profile parks everything on model/fsdp axes instead (documented in
+    EXPERIMENTS.md — 500k single-stream decode is a deliberately lopsided
+    stress cell).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+
+__all__ = ["ShardingProfile", "make_profile", "param_specs", "batch_specs",
+           "cache_specs", "named", "mesh_axis_size"]
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    """Resolved layout choice for one (mesh, shape-kind, batch) cell."""
+
+    batch_axes: tuple          # shards the global batch dimension
+    fsdp_axes: tuple           # shards parameter storage (ZeRO-3)
+    tp_axis: str = "model"
+
+    def batch_spec(self, extra_dims: int = 1) -> P:
+        return P(self.batch_axes if self.batch_axes else None,
+                 *([None] * extra_dims))
+
+
+def make_profile(mesh: Mesh, kind: str, global_batch: int) -> ShardingProfile:
+    axes = list(mesh.axis_names)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    dp = mesh_axis_size(mesh, dp_axes)
+
+    if kind in ("train", "prefill"):
+        batch_axes = dp_axes if global_batch % dp == 0 else _divisible_prefix(
+            mesh, dp_axes, global_batch)
+    else:  # decode / long
+        batch_axes = _divisible_prefix(mesh, dp_axes, global_batch)
+    return ShardingProfile(batch_axes=batch_axes, fsdp_axes=dp_axes)
+
+
+def _divisible_prefix(mesh: Mesh, axes: tuple, n: int) -> tuple:
+    """Largest leading subset of ``axes`` whose product divides n."""
+    out: list = []
+    prod = 1
+    for a in axes:
+        if n % (prod * mesh.shape[a]) == 0:
+            out.append(a)
+            prod *= mesh.shape[a]
+        else:
+            break
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_IN_TP = {"wo", "wd", "xo", "out_proj"}           # contraction dim is TP'd
+_OUT_TP = {"wq", "wk", "wv", "wu", "wg", "xq", "xk", "xv", "in_proj",
+           "wq_a", "wq_b", "wkv_a", "wkv_b"}       # output dim is TP'd
+
+
+def _divides(n: int, mesh: Mesh, axes) -> bool:
+    return n % mesh_axis_size(mesh, axes) == 0 if n else False
+
+
+def _expert_axes(E: int, mesh: Mesh, profile: ShardingProfile):
+    for cand in (profile.fsdp_axes, ("data",), ("pod",)):
+        cand = tuple(a for a in cand if a in mesh.axis_names)
+        if cand and _divides(E, mesh, cand):
+            return cand
+    return None
+
+
+def _leaf_spec(path: tuple, shape: tuple, mesh: Mesh, profile: ShardingProfile,
+               cfg: ArchConfig) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    stacked = "layers" in names[:-1] or "enc_layers" in names[:-1] \
+        or "dec_layers" in names[:-1]
+    tp = profile.tp_axis
+    fsdp = profile.fsdp_axes or None
+    rank = len(shape)
+    body = rank - 1 if stacked else rank  # dims excluding the leading L
+
+    def with_stack(spec_dims: list) -> P:
+        return P(None, *spec_dims) if stacked else P(*spec_dims)
+
+    # embeddings: (V, d) — vocab over tp, d over fsdp
+    if leaf in ("embed",):
+        return P(tp if _divides(shape[0], mesh, tp) else None,
+                 fsdp if _divides(shape[1], mesh, fsdp) else None)
+    if leaf == "unembed":
+        return P(fsdp if _divides(shape[0], mesh, fsdp) else None,
+                 tp if _divides(shape[1], mesh, tp) else None)
+
+    # MoE expert tensors: (L?, E, d_in, d_out)
+    if "moe" in names and leaf in ("wg", "wu", "wd") and body == 3:
+        E, d_in, d_out = shape[-3:]
+        ep = _expert_axes(E, mesh, profile)
+        used_fsdp = ep == (profile.fsdp_axes or ())
+        din_ax = None
+        if not used_fsdp and _divides(d_in, mesh, fsdp):
+            remaining = tuple(a for a in (profile.fsdp_axes or ()) if not ep or a not in ep)
+            if remaining and _divides(d_in, mesh, remaining):
+                din_ax = remaining
+        if leaf == "wd":  # (E, eff, d): eff is the TP dim
+            dims = [ep, tp if _divides(d_in, mesh, tp) else None, None]
+        else:             # (E, d, eff)
+            dims = [ep, din_ax, tp if _divides(d_out, mesh, tp) else None]
+        return with_stack(dims)
+    if leaf == "router":
+        return with_stack([fsdp if _divides(shape[-2], mesh, fsdp) else None, None])
+
+    # 2D projection matrices
+    if body == 2 and leaf in _OUT_TP:
+        d_in, d_out = shape[-2:]
+        return with_stack([
+            fsdp if _divides(d_in, mesh, fsdp) else None,
+            tp if _divides(d_out, mesh, tp) else None,
+        ])
+    if body == 2 and leaf in _IN_TP:
+        d_in, d_out = shape[-2:]
+        return with_stack([
+            tp if _divides(d_in, mesh, tp) else None,
+            fsdp if _divides(d_out, mesh, fsdp) else None,
+        ])
+    if body == 2 and leaf == "conv_w":
+        return with_stack([None, tp if _divides(shape[-1], mesh, tp) else None])
+
+    # everything else (norm scales, biases, A_log, ...): replicate
+    return with_stack([None] * body)
+
+
+def param_specs(abstract_params: Any, mesh: Mesh, profile: ShardingProfile,
+                cfg: ArchConfig):
+    """PartitionSpec pytree mirroring the (abstract) parameter tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf.shape, mesh, profile, cfg),
+        abstract_params,
+    )
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_abstract: Any, mesh: Mesh, profile: ShardingProfile):
+    b = profile.batch_axes if profile.batch_axes else None
+
+    def spec(path, leaf):
+        return P(b, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_abstract)
+
+
+def cache_specs(cache_abstract: Any, mesh: Mesh, profile: ShardingProfile,
+                cfg: ArchConfig):
+    """KV caches: (L, B, S, K, hd) — batch over batch_axes, then K over tp if
+    divisible else hd; MLA latents: (L, B, S, lora) — lora over tp; SSM state:
+    (L, B, H, P, N) — H over tp."""
+    b = profile.batch_axes if profile.batch_axes else None
+    tp = profile.tp_axis
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        leafname = names[-1]
+        shp = leaf.shape
+        stacked = len(shp) >= 1 and any(
+            n in ("layers", "dec_layers", "enc_layers", "cross", "shared_attn")
+            for n in names)
+        if leafname in ("k", "v"):
+            L, B, S, K, hd = shp if stacked else ((1,) + shp)[-5:]
+            head_ax = tp if K % mesh.shape[tp] == 0 else None
+            hd_ax = tp if head_ax is None and hd % mesh.shape[tp] == 0 else None
+            dims = [b, None, head_ax, hd_ax]
+            return P(None, *dims) if stacked else P(*dims)
+        if leafname in ("c_kv", "k_rope"):
+            dims = [b, None, tp if shp[-1] % mesh.shape[tp] == 0 else None]
+            return P(*([None] * (len(shp) - 3)), *dims)
+        if leafname == "conv":
+            dims = [b, None, tp if shp[-1] % mesh.shape[tp] == 0 else None]
+            return P(*([None] * (len(shp) - 3)), *dims)
+        if leafname == "ssm":
+            dims = [b, tp if shp[-3] % mesh.shape[tp] == 0 else None, None, None]
+            return P(*([None] * (len(shp) - 4)), *dims)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abstract)

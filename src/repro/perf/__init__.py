@@ -1,0 +1,11 @@
+"""repro.perf — roofline modeling and HLO collective analysis."""
+
+from repro.perf.hlo import CollectiveStats, parse_collectives, shape_bytes
+from repro.perf.roofline import HW, Hardware, RooflineReport, analyze_compiled, score_lowered
+
+__all__ = [
+    "CollectiveStats", "parse_collectives", "shape_bytes",
+    "HW", "Hardware", "RooflineReport", "analyze_compiled", "score_lowered",
+]
+from repro.perf.hlo_cost import Cost, module_cost  # noqa: E402,F401
+__all__ += ["Cost", "module_cost"]

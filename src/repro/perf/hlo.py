@@ -1,0 +1,115 @@
+"""HLO text analysis: collective-traffic extraction from compiled programs.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes-accessed but not
+collective traffic, so we parse the (post-SPMD-partitioning) HLO text and sum
+the operand/result sizes of every communication op:
+
+    all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute
+
+Shapes in HLO text look like ``bf16[16,1024,128]{2,1,0}`` or tuples thereof.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["CollectiveStats", "parse_collectives", "shape_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one HLO shape, e.g. bf16[2,3,4]{2,1,0} or f32[] ; layout suffix optional
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\](?:\{[^}]*\})?")
+# an HLO instruction line: `%name = <shape-or-tuple> opcode(` — opcode may have
+# `-start`/`-done` suffixes (async collectives)
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z][a-z0-9\-]*\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z][a-z0-9\-]*)\("
+)
+
+
+def shape_bytes(shape_text: str) -> float:
+    """Total bytes of all shapes appearing in ``shape_text``."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-kind collective byte counts for one compiled module (per device)."""
+
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.count_by_kind.values()))
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: {self.count_by_kind[k]} ops / {self.bytes_by_kind[k]/1e6:.2f} MB"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return "; ".join(parts) if parts else "<no collectives>"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result sizes of every collective op in the HLO module text.
+
+    ``-start`` ops carry the payload for async collectives; their ``-done``
+    twins are skipped to avoid double counting. Result size is used as the
+    traffic proxy (for all-gather it is the post-gather size, for
+    reduce-scatter the pre-reduce size is the input — we use max(result,
+    operand) per line to stay conservative).
+    """
+    bytes_by_kind: dict = defaultdict(float)
+    count_by_kind: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_shape, opcode = m.groups()
+        base = opcode
+        if base.endswith("-start"):
+            base = base[: -len("-start")]
+        elif base.endswith("-done") or base.endswith("-update"):
+            continue  # counted at -start
+        if base not in COLLECTIVE_KINDS:
+            continue
+        # operand shapes appear after the opcode's '('; conservative max
+        rest = line[m.end():]
+        operand_bytes = shape_bytes(rest.split(", channel_id")[0])
+        result_bytes = shape_bytes(result_shape)
+        bytes_by_kind[base] += max(result_bytes, operand_bytes)
+        count_by_kind[base] += 1
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind))

@@ -1,0 +1,7 @@
+"""repro.serve — KV cache + prefill/decode serving steps."""
+
+from repro.serve.kvcache import cache_bytes, cache_bytes_per_token, init_cache
+from repro.serve.step import greedy_decode, make_serve_step, prefill
+
+__all__ = ["cache_bytes", "cache_bytes_per_token", "init_cache",
+           "greedy_decode", "make_serve_step", "prefill"]

@@ -1,0 +1,33 @@
+"""KV-cache utilities on top of model.init_cache: cache-usage accounting
+(bytes per token, per arch) — the MLA-vs-GQA comparison numbers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.model import init_cache
+
+__all__ = ["init_cache", "cache_bytes_per_token", "cache_bytes"]
+
+
+def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> int:
+    if cfg.family == "ssm":
+        return 0  # state is O(1) in sequence length
+    if cfg.attn_type == "mla":
+        per = cfg.kv_lora_rank + cfg.qk_rope_dim
+        n = cfg.n_layers
+    elif cfg.family == "hybrid":
+        import numpy as np
+        sites = int(np.ceil(cfg.n_layers / cfg.attn_every)) if cfg.attn_every else 0
+        per = 2 * cfg.n_kv_heads * cfg.hd
+        n = sites
+    else:
+        per = 2 * cfg.n_kv_heads * cfg.hd
+        n = cfg.n_layers
+    return int(per * n * dtype_bytes)
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, seq: int, dtype_bytes: int = 2) -> int:
+    return cache_bytes_per_token(cfg, dtype_bytes) * batch * seq

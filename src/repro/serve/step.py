@@ -1,0 +1,64 @@
+"""Serving steps: prefill (forward over the prompt) + batched greedy decode.
+
+``decode_step`` (one token against a filled cache) lives in
+repro.models.model; this module adds the request-batch driver used by the
+serving example and benchmarks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.model import decode_step, forward, init_cache
+
+__all__ = ["prefill", "greedy_decode", "make_serve_step"]
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int, **fw_kw):
+    """Run the prompt through the model, then replay it through decode_step to
+    fill the cache (simple, correct reference path; a fused prefill-with-cache
+    is a §Perf optimization)."""
+    logits, _ = forward(params, batch, cfg, **fw_kw)
+    B, S = batch["tokens"].shape
+    cache = init_cache(cfg, B, max_len)
+
+    def body(cache, t):
+        _, cache = decode_step(params, cache, jax.lax.dynamic_slice_in_dim(
+            batch["tokens"], t, 1, axis=1), t, cfg)
+        return cache, None
+
+    cache, _ = jax.lax.scan(body, cache, jnp.arange(S))
+    return logits, cache
+
+
+def make_serve_step(cfg: ArchConfig, *, mla_absorb: bool = True):
+    """serve_step(params, cache, token, pos) -> (next_token, logits, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = decode_step(params, cache, token, pos, cfg,
+                                    mla_absorb=mla_absorb)
+        nxt = jnp.argmax(logits, axis=-1).astype(token.dtype)[:, None]
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def greedy_decode(params, cfg: ArchConfig, prompt: jnp.ndarray, steps: int,
+                  max_len: int, **fw_kw):
+    """prompt: (B, S). Returns (B, steps) generated ids."""
+    batch = {"tokens": prompt}
+    if cfg.family == "audio":
+        batch["enc_embed"] = fw_kw.pop("enc_embed")
+    logits, cache = prefill(params, batch, cfg, max_len, **fw_kw)
+    B, S = prompt.shape
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(prompt.dtype)[:, None]
+    serve = make_serve_step(cfg)
+
+    def body(carry, t):
+        tok, cache = carry
+        nxt, _, cache = serve(params, cache, tok, t)
+        return (nxt, cache), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (tok, cache), S + jnp.arange(steps))
+    return toks.T

@@ -1,0 +1,7 @@
+"""repro.train — optimizer + training step."""
+
+from repro.train.optim import adamw_init, adamw_update, cosine_lr, linear_warmup_lr
+from repro.train.step import init_train_state, make_train_step
+
+__all__ = ["adamw_init", "adamw_update", "cosine_lr", "linear_warmup_lr",
+           "init_train_state", "make_train_step"]

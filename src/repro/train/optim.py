@@ -1,0 +1,81 @@
+"""AdamW optimizer (pure pytree transform) + LR schedules.
+
+Optimizer moments live in f32 and inherit the parameter sharding, so with
+FSDP-sharded params this is ZeRO-style sharded optimizer state for free.
+A ``moment_dtype`` knob trades moment precision for HBM (a distributed-
+optimization trick the §Perf loop can flip)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_lr", "linear_warmup_lr"]
+
+
+@dataclasses.dataclass
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params, moment_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decay_mask(path) -> bool:
+    """Decay only matrices (no norms / biases / 1-D vectors)."""
+    return True
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh = m_new / c1
+        vh = v_new / c2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if p.ndim >= 2:  # weight decay on matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def linear_warmup_lr(step, *, peak: float, warmup: int):
+    return peak * jnp.minimum(1.0, (step + 1) / warmup)
+
+
+def cosine_lr(step, *, peak: float, warmup: int, total: int, floor: float = 0.1):
+    warm = (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak * jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,73 @@
+"""Training step: loss + grad + AdamW, with microbatch gradient accumulation
+(lax.scan) and selectable remat policy — the two step-level knobs the
+autotuner searches in the §Perf hillclimb."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.model import loss_fn
+from repro.train.optim import adamw_init, adamw_update
+
+__all__ = ["make_train_step", "init_train_state"]
+
+
+def init_train_state(params, moment_dtype=jnp.float32):
+    return adamw_init(params, moment_dtype)
+
+
+def make_train_step(cfg: ArchConfig, *, lr: float = 3e-4, accum: int = 1,
+                    remat: str = "none", attn_chunk: int = 512,
+                    ssm_chunk: int = 64, weight_decay: float = 0.1,
+                    act_spec=None, logits_spec=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``accum`` > 1 splits the batch into microbatches and accumulates
+    grads in f32 via lax.scan (compute stays per-microbatch, memory drops)."""
+
+    loss = functools.partial(loss_fn, cfg=cfg, remat=remat,
+                             attn_chunk=attn_chunk, ssm_chunk=ssm_chunk,
+                             act_spec=act_spec, logits_spec=logits_spec)
+
+    def split_micro(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % accum == 0, (b, accum)
+            return x.reshape(accum, b // accum, *x.shape[1:])
+        return jax.tree_util.tree_map(r, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (total, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+        else:
+            micro = split_micro(batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (tot, met), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + met["loss"]), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(acc_step, (g0, jnp.zeros(())), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            metrics = {"loss": lsum / accum, "aux": jnp.zeros(())}
+            total = metrics["loss"]
+
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr,
+                                         weight_decay=weight_decay)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        metrics = dict(metrics, total=total, grad_norm=gnorm,
+                       step=opt_state["step"])
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,70 @@
+"""Performance database: dedup, persistence, resume, findMin."""
+
+import csv
+import json
+import os
+
+from repro.core.database import FAILED, OK, PerformanceDatabase
+from repro.core.findmin import find_min, importance_report
+
+
+def test_dedup_and_best():
+    db = PerformanceDatabase()
+    db.add({"a": 1}, 3.0)
+    db.add({"a": 2}, 1.0)
+    db.add({"a": 3}, 9.0, status=FAILED)
+    assert db.contains({"a": 1})
+    assert not db.contains({"a": 7})
+    assert find_min(db).config == {"a": 2}
+    assert db.lookup({"a": 1}).objective == 3.0
+
+
+def test_best_trajectory_monotone():
+    db = PerformanceDatabase()
+    for i, y in enumerate([5.0, 4.0, 6.0, 2.0, 3.0]):
+        db.add({"i": i}, y)
+    traj = db.best_trajectory()
+    assert traj == [5.0, 4.0, 4.0, 2.0, 2.0]
+    assert all(a >= b for a, b in zip(traj, traj[1:]))
+
+
+def test_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "db")
+    db = PerformanceDatabase(path, param_names=["a", "b"])
+    db.add({"a": 1, "b": "x"}, 2.5, elapsed_sec=0.1)
+    db.add({"a": 2, "b": "y"}, 1.5, elapsed_sec=0.2, status=FAILED,
+           info={"error": "boom"})
+
+    # results.csv exists with both rows (paper's output file #1)
+    with open(os.path.join(path, "results.csv")) as f:
+        rows = list(csv.reader(f))
+    assert rows[0] == ["a", "b", "objective", "elapsed_sec", "status"]
+    assert len(rows) == 3
+
+    # results.json reloads into an equivalent DB (the resume log)
+    db2 = PerformanceDatabase(path)
+    assert len(db2) == 2
+    assert db2.best().objective == 2.5  # failed record is not "best"
+    assert db2.contains({"a": 1, "b": "x"})
+    assert db2.records[1].info["error"] == "boom"
+
+
+def test_json_is_valid_and_atomic(tmp_path):
+    path = str(tmp_path / "db")
+    db = PerformanceDatabase(path)
+    for i in range(5):
+        db.add({"i": i}, float(i))
+    with open(os.path.join(path, "results.json")) as f:
+        data = json.load(f)
+    assert [d["config"]["i"] for d in data] == list(range(5))
+    assert not os.path.exists(os.path.join(path, "results.json.tmp"))
+
+
+def test_importance_report_ranks_influential_param():
+    db = PerformanceDatabase()
+    for a in range(4):
+        for b in range(4):
+            db.add({"big": a, "small": b}, 10.0 * a + 0.1 * b)
+    ranked = importance_report(db)
+    assert ranked[0][0] == "big"
+    assert ranked[0][1] > ranked[1][1]

@@ -1,0 +1,137 @@
+"""Bayesian search loop: convergence, learner semantics, fault tolerance,
+resume — the paper's Sec 2.2/2.3 behaviors."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EvalResult,
+    PENALTY,
+    autotune,
+    run_search,
+)
+from repro.core.database import SKIPPED_DUPLICATE
+from repro.core.space import Categorical, ConfigurationSpace, InCondition, Ordinal
+
+TILES = (4, 8, 16, 32, 64, 96, 128)
+
+
+def small_space(seed=1234):
+    cs = ConfigurationSpace(seed=seed)
+    cs.add_hyperparameters([
+        Categorical("pack", (True, False), default=False),
+        Categorical("inter", (True, False), default=False),
+        Ordinal("t1", TILES, default=96),
+        Ordinal("t2", TILES, default=96),
+    ])
+    return cs
+
+
+def objective(cfg) -> float:
+    t = 1.0
+    t -= 0.3 * bool(cfg["pack"])
+    t -= 0.2 * bool(cfg["inter"])
+    t += 0.004 * abs(int(cfg["t1"]) - 64)
+    t += 0.002 * abs(int(cfg["t2"]) - 32)
+    return t
+
+
+def evaluator(cfg) -> EvalResult:
+    return EvalResult(objective(cfg), True, {})
+
+
+def random_best(n, seed=0):
+    cs = small_space(seed)
+    rng = np.random.default_rng(seed)
+    return min(objective(cs.sample_configuration(rng)) for _ in range(n))
+
+
+@pytest.mark.parametrize("learner", ["RF", "GBRT"])
+def test_bo_beats_random_search(learner):
+    res = autotune(small_space(), evaluator, max_evals=50, learner=learner, seed=3)
+    rnd = np.mean([random_best(50, s) for s in range(5)])
+    assert res.best.objective <= rnd + 1e-9, (res.best.objective, rnd)
+
+
+def test_bo_finds_near_optimum():
+    res = autotune(small_space(), evaluator, max_evals=60, learner="RF", seed=0)
+    assert res.best.objective < 0.62  # optimum = 0.5, random mean ~ 1.0
+
+
+def test_tree_learners_never_reevaluate():
+    res = autotune(small_space(), evaluator, max_evals=60, learner="RF", seed=1)
+    keys = [tuple(sorted(r.config.items())) for r in res.db.records]
+    assert len(keys) == len(set(keys))
+    assert res.n_skipped == 0
+
+
+def test_gp_duplicates_consume_budget():
+    """The paper's Fig 6 behavior: GP proposes duplicates, which are skipped
+    but still count toward max-evals, so GP performs fewer real evaluations."""
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameters([Categorical("a", (0, 1)), Categorical("b", (0, 1))])
+    res = autotune(cs, lambda c: EvalResult(float(c["a"] + c["b"]), True, {}),
+                   max_evals=30, learner="GP", seed=0, n_initial=4)
+    assert len(res.db) == 30            # budget fully consumed...
+    assert res.n_evaluated <= 4 + 4     # ...but only ~|space| real evals
+    assert res.n_skipped >= 20
+    assert any(r.status == SKIPPED_DUPLICATE for r in res.db.records)
+
+
+def test_failures_are_penalized_not_fatal():
+    calls = {"n": 0}
+
+    def flaky(cfg) -> EvalResult:
+        calls["n"] += 1
+        if bool(cfg["pack"]):
+            raise AssertionError("unreachable: evaluator contract")
+        return EvalResult(objective(cfg), True, {})
+
+    def guarded(cfg) -> EvalResult:
+        if bool(cfg["pack"]):
+            return EvalResult(PENALTY, False, {"error": "synthetic compile failure"})
+        return EvalResult(objective(cfg), True, {})
+
+    res = autotune(small_space(), guarded, max_evals=40, learner="RF", seed=2)
+    assert res.n_failed > 0
+    assert res.best is not None and not bool(res.best.config["pack"])
+    # the campaign completed the full budget despite failures
+    assert len(res.db) == 40
+
+
+def test_resume_from_database(tmp_path):
+    db_path = str(tmp_path / "camp")
+    res1 = autotune(small_space(), evaluator, max_evals=15, learner="RF",
+                    seed=5, db_path=db_path)
+    assert len(res1.db) == 15
+    # resume: same path, larger budget -> continues, does not restart
+    res2 = autotune(small_space(), evaluator, max_evals=25, learner="RF",
+                    seed=5, db_path=db_path)
+    assert len(res2.db) == 25
+    assert res2.best.objective <= res1.best.objective
+
+
+def test_conditional_space_searchable():
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameters([
+        Categorical("pack_a", (True, False), default=False),
+        Categorical("pack_b", (True, False), default=False),
+        Ordinal("t", TILES, default=96),
+    ])
+    cs.add_condition(InCondition("pack_b", "pack_a", (True,)))
+
+    def obj(cfg):
+        t = 1.0 - 0.2 * bool(cfg["pack_a"]) - 0.3 * bool(cfg.get("pack_b", False))
+        return t + 0.001 * int(cfg["t"])
+
+    res = autotune(cs, lambda c: EvalResult(obj(c), True, {}), max_evals=50,
+                   learner="RF", seed=0)
+    assert res.best.config["pack_a"] is True
+    assert res.best.config.get("pack_b") is True
+
+
+def test_callback_sees_every_record():
+    seen = []
+    run_search(small_space(), evaluator, max_evals=12, learner="ET", seed=0,
+               callback=seen.append)
+    assert len(seen) == 12

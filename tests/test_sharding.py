@@ -1,0 +1,152 @@
+"""Sharding rules: per-leaf specs, profile selection, divisibility — the
+unit-level guarantees behind the dry-run."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model import abstract_params, init_cache
+from repro.parallel.sharding import (
+    batch_specs,
+    cache_specs,
+    make_profile,
+    mesh_axis_size,
+    param_specs,
+)
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """An abstract mesh: enough for spec construction (no devices needed)."""
+    devs = np.empty(shape, dtype=object)
+    return _MeshLike(shape, axes)
+
+
+class _MeshLike:
+    """Duck-typed mesh carrying only .shape and .axis_names."""
+
+    def __init__(self, shape, axes):
+        self.shape = dict(zip(axes, shape))
+        self.axis_names = axes
+
+
+MESH1 = _MeshLike((16, 16), ("data", "model"))
+MESH2 = _MeshLike((2, 16, 16), ("pod", "data", "model"))
+
+
+def _leaf_specs(cfg, mesh, profile):
+    tree = param_specs(abstract_params(cfg), mesh, profile, cfg)
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, P))[0]
+    return {tuple(getattr(k, "key", str(k)) for k in path): spec
+            for path, spec in flat}
+
+
+def _shapes(cfg):
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params(cfg))[0]
+    return {tuple(getattr(k, "key", str(k)) for k in path): leaf.shape
+            for path, leaf in flat}
+
+
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+@pytest.mark.parametrize("arch", ["qwen2-vl-7b", "deepseek-v2-236b",
+                                  "mixtral-8x7b", "mamba2-780m",
+                                  "whisper-large-v3", "gemma3-1b"])
+def test_every_spec_divides_its_dim(arch, mesh):
+    """The invariant the whisper-decode dry-run bug violated: every sharded
+    dim must divide by the product of its mesh axes."""
+    cfg = get_config(arch)
+    profile = make_profile_like(mesh, "train", 256)
+    specs = _leaf_specs(cfg, mesh, profile)
+    shapes = _shapes(cfg)
+    for path, spec in specs.items():
+        shape = shapes[path]
+        assert len(spec) <= len(shape), (path, spec, shape)
+        for dim, axes in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if axes is None:
+                continue
+            n = mesh_axis_size_like(mesh, axes)
+            assert dim % n == 0, (arch, path, spec, shape)
+
+
+def make_profile_like(mesh, kind, batch):
+    from repro.parallel.sharding import ShardingProfile, _divisible_prefix
+
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ShardingProfile(batch_axes=dp_axes, fsdp_axes=dp_axes)
+
+
+def mesh_axis_size_like(mesh, axes):
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def test_expert_weights_sharded_over_experts_when_divisible():
+    cfg = get_config("deepseek-v2-236b")   # 160 experts
+    specs = _leaf_specs(cfg, MESH1, make_profile_like(MESH1, "train", 256))
+    wg = [s for p, s in specs.items() if p[-1] == "wg" and p[-2] == "moe"]
+    assert wg, "no expert weights found"
+    # stacked (L, E, d, ff): E gets the fsdp axes, ff gets model
+    assert tuple(wg[0]) == (None, "data", None, "model"), wg[0]
+
+
+def test_mixtral_experts_fall_back_to_fsdp_on_d():
+    cfg = get_config("mixtral-8x7b")   # 8 experts < 16 data
+    specs = _leaf_specs(cfg, MESH1, make_profile_like(MESH1, "train", 256))
+    wg = [s for p, s in specs.items() if p[-1] == "wg" and p[-2] == "moe"]
+    assert wg[0][1] is None          # E unsharded
+    assert wg[0][3] == "model"       # ff over tp
+
+
+def test_embed_vocab_over_model_axis():
+    cfg = get_config("qwen2-0.5b")
+    specs = _leaf_specs(cfg, MESH1, make_profile_like(MESH1, "train", 256))
+    assert tuple(specs[("embed",)]) == ("model", "data"), specs[("embed",)]
+
+
+def test_norms_replicated():
+    cfg = get_config("qwen2-0.5b")
+    specs = _leaf_specs(cfg, MESH1, make_profile_like(MESH1, "train", 256))
+    assert all(a is None for a in specs[("final_norm",)])
+    ln = [s for p, s in specs.items() if p[-1] == "ln1"]
+    assert all(all(a is None for a in s) for s in ln)
+
+
+def test_cache_specs_divide():
+    for arch in ("whisper-large-v3", "deepseek-v2-236b", "mamba2-780m",
+                 "gemma3-1b", "zamba2-1.2b"):
+        cfg = get_config(arch)
+        cache = jax.eval_shape(lambda: init_cache(cfg, 128, 1024))
+        profile = make_profile_like(MESH1, "decode", 128)
+        specs = cache_specs(cache, MESH1, profile, cfg)
+        flat_s = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]
+        flat_c = jax.tree_util.tree_flatten_with_path(cache)[0]
+        for (path, spec), (_, leaf) in zip(flat_s, flat_c):
+            for dim, axes in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if axes is None:
+                    continue
+                assert dim % mesh_axis_size_like(MESH1, axes) == 0, \
+                    (arch, path, spec, leaf.shape)
+
+
+def test_profile_batch_axes_divide_batch():
+    # long_500k: batch=1 cannot shard -> empty batch axes
+    prof = make_profile_real((2, 16, 16), ("pod", "data", "model"), "decode", 1)
+    assert prof.batch_axes == ()
+    prof = make_profile_real((2, 16, 16), ("pod", "data", "model"), "decode", 128)
+    assert prof.batch_axes == ("pod", "data")
+    prof = make_profile_real((16, 16), ("data", "model"), "train", 256)
+    assert prof.batch_axes == ("data",)
+
+
+def make_profile_real(shape, axes, kind, batch):
+    mesh = _MeshLike(shape, axes)
+    return make_profile(mesh, kind, batch)

@@ -1,0 +1,127 @@
+"""ConfigurationSpace: unit + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.space import (
+    Categorical,
+    ConfigurationSpace,
+    Float,
+    ForbiddenClause,
+    InCondition,
+    Integer,
+    Ordinal,
+    config_key,
+)
+
+
+def paper_syr2k_space(seed=1234):
+    """The verbatim space from the paper's Sec 4.1."""
+    cs = ConfigurationSpace(seed=seed)
+    p0 = Categorical("P0", ("#pragma pack A", " "), default=" ")
+    p1 = Categorical("P1", ("#pragma pack B", " "), default=" ")
+    p2 = Categorical("P2", ("#pragma interchange", " "), default=" ")
+    cs.add_hyperparameters([
+        p0, p1, p2,
+        Ordinal("P3", ("4", "8", "16", "20", "32", "50", "64", "80", "96", "100", "128"), default="96"),
+        Ordinal("P4", ("4", "8", "16", "20", "32", "50", "64", "80", "100", "128", "2048"), default="2048"),
+        Ordinal("P5", ("4", "8", "16", "20", "32", "50", "64", "80", "100", "128", "256"), default="256"),
+    ])
+    cs.add_condition(InCondition("P1", "P0", ("#pragma pack A",)))
+    return cs
+
+
+def test_paper_space_cardinality():
+    # the paper reports 2*2*2*11^3 = 10,648 configurations for syr2k
+    assert paper_syr2k_space().cardinality() == 10_648
+
+
+def test_default_configuration_respects_conditions():
+    cs = paper_syr2k_space()
+    d = cs.default_configuration()
+    assert d["P0"] == " "
+    assert "P1" not in d  # pack-B inactive when A is not packed
+    cs.validate(d)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_samples_always_valid(seed):
+    cs = paper_syr2k_space(seed=seed)
+    cfg = cs.sample_configuration()
+    cs.validate(cfg)  # raises on violation
+    # P1 present iff P0 packs
+    assert ("P1" in cfg) == (cfg["P0"] == "#pragma pack A")
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_encode_fixed_length_and_deterministic(seed):
+    cs = paper_syr2k_space()
+    rng = np.random.default_rng(seed)
+    cfg = cs.sample_configuration(rng)
+    v1 = cs.encode(cfg)
+    v2 = cs.encode(dict(cfg))
+    assert v1.shape == (cs.n_features(),)
+    np.testing.assert_array_equal(v1, v2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_mutate_stays_valid(seed):
+    cs = paper_syr2k_space(seed=seed)
+    cfg = cs.sample_configuration()
+    mut = cs.mutate(cfg)
+    cs.validate(mut)
+
+
+def test_lhs_stratifies_ordinals():
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameter(Ordinal("t", tuple(range(10))))
+    samples = cs.latin_hypercube(10)
+    values = sorted(s["t"] for s in samples)
+    # LHS over 10 strata of a 10-long ordinal must hit every value
+    assert values == list(range(10))
+
+
+def test_integer_log_bounds():
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameter(Integer("n", 1, 1024, log=True))
+    for _ in range(200):
+        v = cs.sample_configuration()["n"]
+        assert 1 <= v <= 1024
+
+
+def test_forbidden_clause_rejected():
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameters([Integer("a", 0, 3), Integer("b", 0, 3)])
+    cs.add_forbidden(ForbiddenClause(lambda c: c["a"] == c["b"], "a==b"))
+    for _ in range(100):
+        cfg = cs.sample_configuration()
+        assert cfg["a"] != cfg["b"]
+
+
+def test_config_key_order_invariant():
+    assert config_key({"a": 1, "b": "x"}) == config_key({"b": "x", "a": 1})
+
+
+def test_validation_errors():
+    cs = paper_syr2k_space()
+    with pytest.raises(ValueError):
+        cs.validate({"P0": "bogus"})
+    with pytest.raises(ValueError):
+        cs.validate({})  # missing active params
+    good = cs.default_configuration()
+    bad = dict(good, P1="#pragma pack B")  # inactive param present
+    with pytest.raises(ValueError):
+        cs.validate(bad)
+
+
+def test_condition_cycle_detected():
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameters([Categorical("a", (0, 1)), Categorical("b", (0, 1))])
+    cs.add_condition(InCondition("a", "b", (0,)))
+    cs.add_condition(InCondition("b", "a", (0,)))
+    with pytest.raises(ValueError):
+        cs.sample_configuration()

@@ -1,0 +1,103 @@
+"""Surrogate models: fit/predict sanity for all four learners."""
+
+import numpy as np
+import pytest
+
+from repro.core.surrogates import (
+    LEARNERS,
+    ExtraTrees,
+    GaussianProcess,
+    GradientBoostedTrees,
+    RandomForest,
+    RegressionTree,
+    make_learner,
+)
+
+
+def _toy(n=120, d=4, seed=0, noise=0.01):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, size=(n, d))
+    y = 3 * X[:, 0] + np.sin(4 * X[:, 1]) + 0.5 * X[:, 2] * X[:, 3]
+    return X, y + noise * rng.standard_normal(n)
+
+
+def test_tree_fits_training_data():
+    X, y = _toy()
+    t = RegressionTree(max_depth=16, min_samples_leaf=1).fit(X, y)
+    pred = t.predict(X)
+    assert np.mean((pred - y) ** 2) < 0.05 * np.var(y)
+
+
+def test_tree_constant_target():
+    X, _ = _toy(30)
+    y = np.full(30, 7.0)
+    t = RegressionTree().fit(X, y)
+    np.testing.assert_allclose(t.predict(X), 7.0)
+
+
+@pytest.mark.parametrize("name", LEARNERS)
+def test_learner_beats_mean_predictor(name):
+    X, y = _toy(150)
+    Xte, yte = _toy(60, seed=1)
+    model = make_learner(name, seed=0).fit(X, y)
+    mu, sigma = model.predict(Xte)
+    assert mu.shape == (60,) and sigma.shape == (60,)
+    assert np.all(sigma >= 0)
+    mse_model = np.mean((mu - yte) ** 2)
+    mse_mean = np.mean((y.mean() - yte) ** 2)
+    assert mse_model < 0.5 * mse_mean, (name, mse_model, mse_mean)
+
+
+def test_rf_uncertainty_grows_off_distribution():
+    X, y = _toy(100)
+    model = RandomForest(seed=0).fit(X, y)
+    _, sig_in = model.predict(X[:10])
+    _, sig_out = model.predict(np.full((10, X.shape[1]), 5.0))  # far outside
+    assert sig_out.mean() >= sig_in.mean()
+
+
+def test_gbrt_quantiles_ordered():
+    X, y = _toy(150, noise=0.3)
+    m = GradientBoostedTrees(seed=0)
+    m.fit(X, y)
+    lo = m.models[0.16].predict(X)
+    mid = m.models[0.50].predict(X)
+    hi = m.models[0.84].predict(X)
+    # quantile ensembles should be ordered on average
+    assert (lo <= hi).mean() > 0.9
+    assert lo.mean() < mid.mean() < hi.mean()
+
+
+def test_gp_interpolates_noiseless():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, size=(25, 2))
+    y = np.sin(3 * X[:, 0]) + X[:, 1]
+    gp = GaussianProcess(noise=1e-6).fit(X, y)
+    mu, sigma = gp.predict(X)
+    np.testing.assert_allclose(mu, y, atol=5e-2)
+    # uncertainty at training points << prior scale
+    assert sigma.mean() < 0.5 * y.std()
+
+
+def test_gp_uncertainty_away_from_data():
+    X = np.zeros((10, 2))
+    X[:, 0] = np.linspace(0, 1, 10)
+    y = X[:, 0] * 2
+    gp = GaussianProcess().fit(X, y)
+    _, s_near = gp.predict(X)
+    _, s_far = gp.predict(np.array([[0.5, 30.0]]))
+    assert s_far[0] > s_near.mean()
+
+
+def test_extra_trees_differ_from_rf():
+    X, y = _toy()
+    rf = RandomForest(seed=0).fit(X, y)
+    et = ExtraTrees(seed=0).fit(X, y)
+    mu_rf, _ = rf.predict(X)
+    mu_et, _ = et.predict(X)
+    assert not np.allclose(mu_rf, mu_et)
+
+
+def test_make_learner_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_learner("SVM")

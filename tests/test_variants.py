@@ -1,0 +1,81 @@
+"""Host (backend-B1) variants: every timed code mold must equal ref.py."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as R
+from repro.kernels import variants as V
+
+
+def _close(got, want, tol=2e-3):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(bm=st.sampled_from([16, 32, 50]), bn=st.sampled_from([16, 32, 50]),
+       bk=st.sampled_from([8, 16, 64]), inter=st.booleans(), pack=st.booleans())
+def test_blocked_matmul_host_property(bm, bn, bk, inter, pack):
+    a = jax.random.normal(jax.random.PRNGKey(0), (70, 50))
+    b = jax.random.normal(jax.random.PRNGKey(1), (50, 60))
+    got = V.blocked_matmul_host(a, b, bm=bm, bn=bn, bk=bk, interchange=inter,
+                                pack=pack)
+    _close(got, a @ b, 1e-3)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(bi=32, bj=32, bk=32),
+    dict(bi=50, bj=20, bk=16, interchange=True, pack_a=True, pack_b=True),
+])
+def test_syr2k_variant(cfg):
+    C, A, B = R.init_syr2k(70, 60)
+    _close(V.syr2k_variant(C, A, B, 1.5, 1.2, **cfg), R.syr2k_ref(C, A, B), 5e-3)
+
+
+def test_lu_variant():
+    (A,) = R.init_lu(96)
+    _close(V.lu_variant(A, bs=20), R.lu_ref(A), 5e-3)
+
+
+@pytest.mark.parametrize("bi,fuse", [(4, 1), (8, 2)])
+def test_heat3d_variant(bi, fuse):
+    (A,) = R.init_heat3d(16)
+    _close(V.heat3d_variant(A, 2, bi=bi, fuse_t=fuse), R.heat3d_ref(A, 2))
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(bi=16, bj=16, bk=32),
+    dict(bi=20, bj=50, bk=16, fuse_center=False, interchange=True),
+])
+def test_covariance_variant(cfg):
+    (d,) = R.init_covariance(84, 40)
+    _close(V.covariance_variant(d, **cfg), R.covariance_ref(d))
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(bs=16, unroll=1), dict(bs=20, unroll=4), dict(bs=100, unroll=8),
+])
+def test_fw_variant(cfg):
+    (W,) = R.init_floyd_warshall(60)
+    _close(V.floyd_warshall_variant(W, bi=32, bj=32, **cfg),
+           R.floyd_warshall_ref(W))
+
+
+def test_factories_return_timeable_callables():
+    C, A, B = R.init_syr2k(40, 30)
+    factory = V.syr2k_host((C, A, B))
+    fn, args = factory({"bi": 16, "bj": 16, "bk": 16})
+    out = jax.jit(fn)(*args)
+    _close(out, R.syr2k_ref(C, A, B), 5e-3)
+
+
+def test_naive_fns_match_ref():
+    fns = V.naive_fns()
+    C, A, B = R.init_syr2k(40, 30)
+    _close(jax.jit(fns["syr2k"])(C, A, B), R.syr2k_ref(C, A, B), 5e-3)
+    d = R.init_covariance(50, 30)[0]
+    _close(jax.jit(fns["covariance"])(d), R.covariance_ref(d))
+    A3 = R.init_mm3(20, 18, 16, 22, 20)
+    _close(jax.jit(fns["mm3"])(*A3), R.mm3_ref(*A3), 5e-3)
