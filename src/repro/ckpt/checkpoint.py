@@ -1,7 +1,12 @@
-"""Checkpointing: msgpack+zstd pytree snapshots with atomic rename, async
-save, and step-addressed resume — the train-loop half of fault tolerance
-(the autotuner's half is the performance database, which is its own resume
-log)."""
+"""Checkpointing: msgpack(+zstd when available) pytree snapshots with atomic
+rename, async save, and step-addressed resume — the train-loop half of fault
+tolerance (the autotuner's half is the performance database, which is its own
+resume log).
+
+``zstandard`` is optional: shards start with a one-byte format flag
+(``\\x01`` = zstd-compressed, ``\\x00`` = raw msgpack), so hosts without the
+compressor still checkpoint and restore. Legacy flagless shards (a bare zstd
+frame, magic ``0x28``) remain readable when zstandard is installed."""
 
 from __future__ import annotations
 
@@ -14,11 +19,17 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional: fall back to uncompressed shards
+    zstandard = None
 
 __all__ = ["save", "restore", "AsyncCheckpointer", "latest_step"]
 
 _MAGIC = "repro-ckpt-v1"
+_FLAG_RAW = b"\x00"
+_FLAG_ZSTD = b"\x01"
 
 
 def _pack_leaf(x):
@@ -43,7 +54,10 @@ def save(path: str, tree, step: int, *, meta: dict | None = None,
     payload = msgpack.packb(
         {"magic": _MAGIC, "leaves": [_pack_leaf(x) for x in leaves]},
         use_bin_type=True)
-    payload = zstandard.ZstdCompressor(level=level).compress(payload)
+    if zstandard is not None:
+        payload = _FLAG_ZSTD + zstandard.ZstdCompressor(level=level).compress(payload)
+    else:
+        payload = _FLAG_RAW + payload
 
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -75,7 +89,20 @@ def restore(path: str, tree_template, step: int | None = None):
             raise FileNotFoundError(f"no checkpoints under {path}")
     d = os.path.join(path, f"step_{step:08d}")
     with open(os.path.join(d, "shard_0.msgpack.zst"), "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        data = f.read()
+    flag, body = data[:1], data[1:]
+    if flag == _FLAG_RAW:
+        payload = body
+    elif flag == _FLAG_ZSTD:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint shard is zstd-compressed but zstandard is not installed")
+        payload = zstandard.ZstdDecompressor().decompress(body)
+    else:  # legacy flagless shard: a bare zstd frame
+        if zstandard is None:
+            raise RuntimeError(
+                "legacy zstd checkpoint shard but zstandard is not installed")
+        payload = zstandard.ZstdDecompressor().decompress(data)
     obj = msgpack.unpackb(payload, raw=False)
     assert obj["magic"] == _MAGIC, "corrupt checkpoint"
     leaves, treedef = jax.tree_util.tree_flatten(tree_template)

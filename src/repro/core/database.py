@@ -2,7 +2,10 @@
 
 Mirrors ytopt's two output files (Sec. 2.3 step 6): ``results.csv`` (one row
 per evaluation: parameter values, objective, elapsed wall-clock) and
-``results.json`` (full records). The DB also provides the duplicate check the
+``results.jsonl`` (full records, one JSON object per line, appended per
+evaluation so a campaign's persistence cost stays O(n) instead of the old
+rewrite-the-whole-JSON-array O(n²); legacy ``results.json`` directories are
+still loadable and are migrated on first open). The DB also provides the duplicate check the
 paper describes ("At the evaluation stage, check the performance database to
 make sure that this chosen configuration is new") and is the resume log: a
 search restarted on the same DB path continues where it stopped, which is the
@@ -18,6 +21,7 @@ import os
 import time
 from typing import Any, Iterable, Mapping
 
+from repro.core.jsonl import append_jsonl, repair_torn_tail
 from repro.core.space import config_key
 
 __all__ = ["Record", "PerformanceDatabase"]
@@ -107,7 +111,7 @@ class PerformanceDatabase:
             self._seen[key] = rec.index
         if self.path:
             self._append_csv(rec)
-            self._rewrite_json()
+            self._append_jsonl(rec)
         return rec
 
     # -- analysis (findMin.py role lives in findmin.py, built on these) ----------
@@ -136,6 +140,9 @@ class PerformanceDatabase:
     def _json_path(self) -> str:
         return os.path.join(self.path, "results.json")
 
+    def _jsonl_path(self) -> str:
+        return os.path.join(self.path, "results.jsonl")
+
     def _ensure_param_names(self, config: Mapping[str, Any]) -> None:
         for k in config:
             if k not in self.param_names:
@@ -154,21 +161,44 @@ class PerformanceDatabase:
                 + [rec.objective, rec.elapsed_sec, rec.status]
             )
 
-    def _rewrite_json(self) -> None:
-        tmp = self._json_path() + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump([r.to_json() for r in self.records], f, indent=1)
-        os.replace(tmp, self._json_path())  # atomic: crash-safe resume point
+    def _append_jsonl(self, rec: Record) -> None:
+        # each record is a crash-safe resume point
+        append_jsonl(self._jsonl_path(), rec.to_json())
 
-    def _maybe_load(self) -> None:
-        path = self._json_path()
-        if not os.path.exists(path):
-            return
-        with open(path) as f:
-            data = json.load(f)
+    def _load_records(self, data: Iterable[Mapping[str, Any]]) -> None:
         for d in data:
             rec = Record.from_json(d)
             rec.index = len(self.records)
             self.records.append(rec)
             key = config_key(rec.config)
             self._seen.setdefault(key, rec.index)
+
+    def _maybe_load(self) -> None:
+        jsonl = self._jsonl_path()
+        if os.path.exists(jsonl):
+            # terminate any torn tail first so later appends stay
+            # line-delimited instead of merging into the fragment
+            repair_torn_tail(jsonl)
+            with open(jsonl) as f:
+                rows = []
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rows.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        continue  # isolated torn fragment from a crash
+            self._load_records(rows)
+            return
+        legacy = self._json_path()
+        if not os.path.exists(legacy):
+            return
+        with open(legacy) as f:
+            self._load_records(json.load(f))
+        # migrate once so future appends extend the full history
+        tmp = jsonl + ".tmp"
+        with open(tmp, "w") as f:
+            for r in self.records:
+                f.write(json.dumps(r.to_json()) + "\n")
+        os.replace(tmp, jsonl)

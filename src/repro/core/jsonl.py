@@ -1,0 +1,42 @@
+"""Crash-safe JSONL primitives shared by the performance database and the
+dispatch tuning store.
+
+The failure mode both care about: a writer dies mid-append, leaving a torn
+(newline-less) final line. A later append must not concatenate onto that
+tail — it would merge two records into one unparseable line and silently
+lose both. :func:`repair_torn_tail` terminates the tail so the torn fragment
+becomes an isolated invalid line that loaders can skip, and every append
+stays line-delimited.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+__all__ = ["repair_torn_tail", "append_jsonl"]
+
+
+def repair_torn_tail(path: str) -> bool:
+    """Terminate a torn final line with a newline. Returns True on repair.
+    Call before appending to (or after crash-loading) a JSONL file."""
+    if not os.path.exists(path) or os.path.getsize(path) == 0:
+        return False
+    with open(path, "rb+") as f:
+        f.seek(-1, os.SEEK_END)
+        if f.read(1) == b"\n":
+            return False
+        f.write(b"\n")
+        return True
+
+
+def append_jsonl(path: str, obj: Any, fsync: bool = False) -> int:
+    """Append one JSON object as one line; returns bytes written."""
+    line = json.dumps(obj) + "\n"
+    with open(path, "a") as f:
+        f.write(line)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    return len(line.encode())

@@ -64,12 +64,12 @@ class BayesianSearch:
         n_candidates: int = 512,
         seed: int = 1234,
         db: PerformanceDatabase | None = None,
+        prior_records: list[tuple[Mapping[str, Any], float]] | None = None,
     ):
         self.space = space
         self.learner_name = learner.upper()
         self.acq = acq_mod.make_acquisition(acq)
         self.kappa = kappa
-        self.n_initial = n_initial
         self.init_method = init_method
         self.n_candidates = n_candidates
         self.rng = np.random.default_rng(seed)
@@ -77,6 +77,26 @@ class BayesianSearch:
         self.db = db if db is not None else PerformanceDatabase()
         self._init_queue: list[dict] = []
         self._model = None
+        # warm start: (config, objective) pairs from a prior campaign (e.g. a
+        # TuningStore nearest neighbor) become virtual observations — they seed
+        # the surrogate without consuming evaluation budget, and each prior
+        # replaces one random initialization sample.
+        self._prior_X, self._prior_y = self._encode_priors(prior_records or [])
+        self.n_priors = 0 if self._prior_y is None else len(self._prior_y)
+        self.n_initial = max(1, n_initial - self.n_priors) if self.n_priors else n_initial
+
+    def _encode_priors(self, records):
+        X, y = [], []
+        for cfg, obj in records:
+            try:  # foreign configs (other space revisions) are skipped, not fatal
+                self.space.validate(cfg)
+                X.append(self.space.encode(cfg))
+                y.append(float(obj))
+            except Exception:
+                continue
+        if not X:
+            return None, None
+        return np.stack(X), np.array(y)
 
     # GP is the learner that does NOT consult the DB to re-select on duplicates
     @property
@@ -96,11 +116,16 @@ class BayesianSearch:
         the surrogate learns to avoid the region without its scale exploding."""
         recs = [r for r in self.db.records if r.status in (OK, FAILED)]
         if not recs:
+            if self._prior_X is not None:
+                return self._prior_X, self._prior_y
             return None, None
         ok_vals = [r.objective for r in recs if r.status == OK]
         cap = (max(ok_vals) * 2.0 + 1e-9) if ok_vals else 1.0
         X = self.space.encode_many([r.config for r in recs])
         y = np.array([min(r.objective, cap) for r in recs])
+        if self._prior_X is not None:
+            X = np.concatenate([X, self._prior_X])
+            y = np.concatenate([y, self._prior_y])
         return X, y
 
     def _candidate_pool(self) -> list[dict]:
@@ -171,15 +196,21 @@ def run_search(
     acq: str = "LCB",
     callback: Callable[[Record], None] | None = None,
     warm_start: list | None = None,
+    warm_start_records: list[tuple[Mapping[str, Any], float]] | None = None,
 ) -> SearchResult:
     """Run a full campaign (Sec. 2.3 steps 4-8). Resumable: if ``db_path``
     already holds records, the campaign continues from them. ``warm_start``
-    configs (e.g. the known default schedule) are evaluated first so the
-    surrogate — and the final best — always include them."""
+    configs (e.g. the known default schedule, or a TuningStore best) are
+    evaluated first so the surrogate — and the final best — always include
+    them. ``warm_start_records`` are already-measured (config, objective)
+    pairs from prior campaigns: they seed the surrogate as virtual
+    observations and shrink the random-initialization phase, so a
+    warm-started campaign converges in far fewer evaluations."""
     db = PerformanceDatabase(db_path, param_names=space.param_names)
     search = BayesianSearch(
         space, learner=learner, kappa=kappa, acq=acq, n_initial=n_initial,
         init_method=init_method, seed=seed, db=db,
+        prior_records=warm_start_records,
     )
     n_skipped = sum(1 for r in db.records if r.status == SKIPPED_DUPLICATE)
     n_failed = sum(1 for r in db.records if r.status == FAILED)

@@ -1,0 +1,58 @@
+"""repro.dispatch — tuning cache + runtime kernel dispatch.
+
+The layer that turns offline autotuning campaigns into an online service:
+a persistent :class:`TuningStore` of best-known configs keyed by
+``(kernel, shape-signature, backend)``, nearest-neighbor resolution for
+shapes no campaign ever saw, a :func:`dispatch` runtime API with an
+in-process compiled-executable cache, and background BO campaigns
+(warm-started from the store) that hot-swap better configs in as they land.
+
+    from repro import dispatch
+    svc = dispatch.configure("results/store")
+    out = svc.call("syr2k", C, A, B)          # tuned variant, jitted+cached
+"""
+
+from repro.dispatch.background import BackgroundTuner
+from repro.dispatch.lookup import Resolution, resolve
+from repro.dispatch.registry import VariantSpec, get, register, registered
+from repro.dispatch.service import (
+    DispatchService,
+    call,
+    configure,
+    dispatch,
+    get_service,
+)
+from repro.dispatch.signature import (
+    ShapeSignature,
+    bucket_signature,
+    compatible,
+    parse_signature_key,
+    shape_signature,
+    signature_distance,
+    signature_key,
+)
+from repro.dispatch.store import TuningRecord, TuningStore
+
+__all__ = [
+    "BackgroundTuner",
+    "DispatchService",
+    "Resolution",
+    "ShapeSignature",
+    "TuningRecord",
+    "TuningStore",
+    "VariantSpec",
+    "bucket_signature",
+    "call",
+    "compatible",
+    "configure",
+    "dispatch",
+    "get",
+    "get_service",
+    "parse_signature_key",
+    "register",
+    "registered",
+    "resolve",
+    "shape_signature",
+    "signature_distance",
+    "signature_key",
+]

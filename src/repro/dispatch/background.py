@@ -1,0 +1,136 @@
+"""Background tuning: async BO campaigns feeding the store.
+
+A dispatch-time cache miss (or a too-distant / stale resolution) enqueues a
+campaign on a small thread worker pool. Each campaign reuses the exact
+offline machinery — :func:`repro.core.search.run_search` — but warm-started
+from the store's nearest-neighbor records, so an online campaign typically
+needs a fraction of the offline 200-evaluation budget. The winning config is
+published back to the :class:`TuningStore` (an atomic best-only append, i.e.
+the hot swap) and an ``on_done`` callback lets the dispatch service
+invalidate its compiled-executable cache for the affected signature.
+
+In-flight deduplication is by ``(kernel, signature, backend)``: a hot
+serving path that misses a thousand times enqueues one campaign, not a
+thousand.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+from typing import Any, Callable
+
+from repro.core.search import run_search
+from repro.dispatch.signature import ShapeSignature, signature_distance, signature_key
+from repro.dispatch.store import TuningRecord, TuningStore
+
+__all__ = ["BackgroundTuner"]
+
+
+class BackgroundTuner:
+    def __init__(
+        self,
+        store: TuningStore,
+        *,
+        max_workers: int = 2,
+        max_evals: int = 20,
+        learner: str = "RF",
+        seed: int = 1234,
+        n_initial: int = 4,
+        warm_neighbors: int = 3,
+    ):
+        self.store = store
+        self.max_evals = max_evals
+        self.learner = learner
+        self.seed = seed
+        self.n_initial = n_initial
+        self.warm_neighbors = warm_neighbors
+        self._pool = cf.ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="repro-bg-tune")
+        self._inflight: set[tuple] = set()
+        self._futures: list[cf.Future] = []
+        self._lock = threading.Lock()
+        self.errors: list[tuple[tuple, BaseException]] = []
+
+    # -- submission --------------------------------------------------------------
+
+    def submit(
+        self,
+        kernel: str,
+        signature: ShapeSignature,
+        backend: str,
+        *,
+        space: Any,
+        evaluator: Callable,
+        max_evals: int | None = None,
+        on_done: Callable[[str, ShapeSignature, str], None] | None = None,
+    ) -> cf.Future | None:
+        """Enqueue one campaign per distinct key; returns None when one is
+        already in flight for this ``(kernel, signature, backend)``."""
+        key = (kernel, signature_key(signature), backend)
+        with self._lock:
+            if key in self._inflight:
+                return None
+            self._inflight.add(key)
+        fut = self._pool.submit(
+            self._campaign, key, kernel, signature, backend, space, evaluator,
+            max_evals or self.max_evals, on_done)
+        with self._lock:
+            self._futures.append(fut)
+        return fut
+
+    def _warm_start(self, kernel: str, signature: ShapeSignature, backend: str):
+        """Nearest store records become warm-start material: the single
+        closest config is re-evaluated first, and up to ``warm_neighbors``
+        neighbors seed the surrogate as virtual observations."""
+        ranked = sorted(
+            self.store.records(kernel=kernel, backend=backend),
+            key=lambda r: signature_distance(signature, r.signature))
+        ranked = [r for r in ranked
+                  if signature_distance(signature, r.signature) != float("inf")]
+        if not ranked:
+            return None, None
+        configs = [dict(ranked[0].config)]
+        records = [(dict(r.config), float(r.objective))
+                   for r in ranked[: self.warm_neighbors]]
+        return configs, records
+
+    def _campaign(self, key, kernel, signature, backend, space, evaluator,
+                  max_evals, on_done) -> TuningRecord | None:
+        try:
+            warm_cfgs, warm_recs = self._warm_start(kernel, signature, backend)
+            result = run_search(
+                space, evaluator, max_evals=max_evals, learner=self.learner,
+                seed=self.seed, n_initial=self.n_initial,
+                warm_start=warm_cfgs, warm_start_records=warm_recs)
+            if result.best is None:
+                return None
+            rec = TuningRecord(
+                kernel=kernel, signature=signature, backend=backend,
+                config=dict(result.best.config),
+                objective=float(result.best.objective),
+                n_evals=len(result.db), source="background")
+            self.store.put(rec)
+            if on_done is not None:
+                on_done(kernel, signature, backend)
+            return rec
+        except BaseException as e:  # noqa: BLE001 — a worker must never die silently
+            with self._lock:
+                self.errors.append((key, e))
+            return None
+        finally:
+            with self._lock:
+                self._inflight.discard(key)
+
+    # -- lifecycle ---------------------------------------------------------------
+
+    def drain(self, timeout: float | None = None) -> list[TuningRecord | None]:
+        """Block until every submitted campaign finishes; returns their
+        published records (None for no-improvement or failed campaigns —
+        failures are collected in ``self.errors``, not raised)."""
+        with self._lock:
+            futs = list(self._futures)
+        return [f.result(timeout=timeout) for f in futs]
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._pool.shutdown(wait=wait)

@@ -1,0 +1,53 @@
+"""Nearest-neighbor config resolution over the tuning store.
+
+An exact ``(kernel, signature, backend)`` hit wins outright. Otherwise the
+store's records for the same kernel+backend are ranked by log-scale shape
+distance (see :mod:`repro.dispatch.signature`) and the closest compatible
+record is returned, annotated with its distance so callers can decide
+whether the neighbor is close enough to serve as-is or should also trigger
+a background re-tune.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.dispatch.signature import ShapeSignature, signature_distance
+from repro.dispatch.store import TuningRecord, TuningStore
+
+__all__ = ["Resolution", "resolve"]
+
+
+@dataclasses.dataclass
+class Resolution:
+    record: TuningRecord
+    distance: float      # 0.0 for an exact hit
+    exact: bool
+
+    @property
+    def config(self) -> dict:
+        return self.record.config
+
+
+def resolve(
+    store: TuningStore,
+    kernel: str,
+    signature: ShapeSignature,
+    backend: str,
+    max_distance: float | None = None,
+) -> Resolution | None:
+    """Exact hit, else nearest compatible neighbor within ``max_distance``
+    (no bound when ``None``). Returns ``None`` when nothing qualifies."""
+    hit = store.get(kernel, signature, backend)
+    if hit is not None:
+        return Resolution(hit, 0.0, True)
+    best, best_d = None, float("inf")
+    for rec in store.records(kernel=kernel, backend=backend):
+        d = signature_distance(signature, rec.signature)
+        if d < best_d:
+            best, best_d = rec, d
+    if best is None or best_d == float("inf"):
+        return None
+    if max_distance is not None and best_d > max_distance:
+        return None
+    return Resolution(best, best_d, False)

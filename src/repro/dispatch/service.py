@@ -1,0 +1,232 @@
+"""The runtime dispatch service: ``dispatch(kernel_name, *args)``.
+
+Resolution pipeline per call:
+
+  1. derive the shape signature from the runtime args (plus static kwargs);
+  2. consult the in-process **compiled-executable cache** keyed by
+     ``(kernel, config, signature)`` — a signature-keyed fast map (TTL
+     ``resolve_ttl_sec``) remembers the last resolution, so a hit returns
+     the already-jitted variant with zero store traffic; the TTL bounds how
+     long a cross-process store improvement can go unnoticed, and in-process
+     improvements are picked up immediately via :meth:`invalidate`;
+  3. on a cache miss, resolve a config from the :class:`TuningStore`
+     (exact hit → nearest neighbor → registered space default), build the
+     variant via the dispatch registry, jit it, and cache it;
+  4. when the resolution is a miss, a too-distant neighbor, or a stale
+     record — and a :class:`~repro.dispatch.background.BackgroundTuner` is
+     attached — enqueue an async BO campaign for this exact signature. Its
+     result is published to the store and hot-swapped in by invalidating
+     the affected executable-cache entries, so later calls pick it up.
+
+``stats`` counts every path (store_exact / store_near / store_default,
+exec_hit / exec_miss, bg_enqueued) so serving dashboards can watch cache
+efficiency and tuning pressure.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.core.plopper import TimingEvaluator
+from repro.core.space import config_key
+from repro.dispatch.lookup import Resolution, resolve
+from repro.dispatch.registry import get as get_variant
+from repro.dispatch.signature import shape_signature, signature_key
+from repro.dispatch.store import TuningStore
+
+__all__ = ["DispatchService", "dispatch", "call", "get_service", "configure"]
+
+
+class DispatchService:
+    def __init__(
+        self,
+        store: TuningStore | None = None,
+        *,
+        backend: str = "host",
+        target: str = "host",
+        distance_threshold: float = 1.0,
+        staleness_sec: float | None = None,
+        tuner: Any | None = None,
+        jit: bool = True,
+        resolve_ttl_sec: float = 30.0,
+    ):
+        self.store = store
+        self.backend = backend
+        self.target = target
+        self.distance_threshold = distance_threshold
+        self.staleness_sec = staleness_sec
+        self.tuner = tuner
+        self.jit = jit
+        self.resolve_ttl_sec = resolve_ttl_sec
+        # signature -> (exec key, monotonic expiry): lets repeat dispatches
+        # skip store refresh + nearest-neighbor scan on the hot path
+        self._fast: dict[tuple, tuple[tuple, float]] = {}
+        self.stats = {
+            "store_exact": 0, "store_near": 0, "store_default": 0,
+            "exec_hit": 0, "exec_miss": 0, "bg_enqueued": 0,
+        }
+        self._exec: dict[tuple, Callable] = {}
+        self._lock = threading.RLock()
+
+    # -- config resolution -------------------------------------------------------
+
+    def resolve_config(self, kernel: str, signature) -> tuple[dict, Resolution | None]:
+        """Store-resolved config for a signature, falling back to the
+        registered space default when the store is empty/absent."""
+        res = None
+        if self.store is not None:
+            self.store.refresh()
+            res = resolve(self.store, kernel, signature, self.backend)
+        with self._lock:
+            if res is None:
+                self.stats["store_default"] += 1
+            elif res.exact:
+                self.stats["store_exact"] += 1
+            else:
+                self.stats["store_near"] += 1
+        if res is not None:
+            return dict(res.config), res
+        return get_variant(kernel).default_config(self.target), None
+
+    def _needs_tuning(self, res: Resolution | None) -> bool:
+        if res is None:
+            return True
+        if not res.exact and res.distance > self.distance_threshold:
+            return True
+        if self.staleness_sec is not None and res.record.age_sec() > self.staleness_sec:
+            return True
+        return False
+
+    # -- the runtime API ---------------------------------------------------------
+
+    def dispatch(self, kernel: str, *args, **static_kw) -> Callable:
+        """Return a jitted variant of ``kernel`` tuned for these args' shapes.
+        The returned callable takes the same positional args."""
+        spec = get_variant(kernel)
+        sig = shape_signature(list(args) + [v for _, v in sorted(static_kw.items())])
+        static_id = tuple(sorted(static_kw.items()))
+        fast_key = (kernel, signature_key(sig), static_id)
+        with self._lock:  # hot path: recent resolution -> zero store traffic
+            entry = self._fast.get(fast_key)
+            if entry is not None:
+                exec_key, expires = entry
+                fn = self._exec.get(exec_key)
+                if fn is not None and time.monotonic() < expires:
+                    self.stats["exec_hit"] += 1
+                    return fn
+        config, res = self.resolve_config(kernel, sig)
+        key = fast_key + (config_key(config),)
+        with self._lock:
+            fn = self._exec.get(key)
+            if fn is not None:
+                self.stats["exec_hit"] += 1
+            else:
+                self.stats["exec_miss"] += 1
+        if fn is None:
+            built = spec.builder(config, **static_kw)
+            fn = jax.jit(built) if self.jit else built
+            with self._lock:
+                fn = self._exec.setdefault(key, fn)
+        with self._lock:
+            self._fast[fast_key] = (key, time.monotonic() + self.resolve_ttl_sec)
+        if self.tuner is not None and self.store is not None and self._needs_tuning(res):
+            self._enqueue_tuning(spec, kernel, sig, args, static_kw)
+        return fn
+
+    def call(self, kernel: str, *args, **static_kw):
+        """Resolve, build, and run in one step."""
+        return self.dispatch(kernel, *args, **static_kw)(*args)
+
+    def _enqueue_tuning(self, spec, kernel, sig, args, static_kw) -> None:
+        def factory(cfg):
+            return spec.builder(cfg, **static_kw), args
+
+        if spec.make_evaluator is not None:
+            evaluator = spec.make_evaluator(factory)
+        else:
+            evaluator = TimingEvaluator(
+                factory, repeats=spec.eval_repeats, warmup=spec.eval_warmup)
+        fut = self.tuner.submit(
+            kernel, sig, self.backend, space=spec.space(self.target),
+            evaluator=evaluator, on_done=self._on_tuned)
+        if fut is not None:
+            with self._lock:
+                self.stats["bg_enqueued"] += 1
+
+    def _on_tuned(self, kernel: str, signature, backend: str) -> None:
+        self.invalidate(kernel, signature)
+
+    # -- cache management --------------------------------------------------------
+
+    def invalidate(self, kernel: str | None = None, signature=None) -> int:
+        """Drop executable-cache entries (all, per kernel, or per kernel+sig)
+        so the next dispatch re-resolves — the hot-swap half of background
+        tuning. Returns the number of entries dropped."""
+        sig_key = signature_key(signature) if signature is not None else None
+
+        def matches(k):
+            return (kernel is None or k[0] == kernel) and \
+                   (sig_key is None or k[1] == sig_key)
+
+        with self._lock:
+            doomed = [k for k in self._exec if matches(k)]
+            for k in doomed:
+                del self._exec[k]
+            for k in [k for k in self._fast if matches(k)]:
+                del self._fast[k]
+            return len(doomed)
+
+    # -- generic executable cache (serving integration) --------------------------
+
+    def jit_cached(self, name: str, fn: Callable) -> Callable:
+        """Cache-and-jit an arbitrary callable under a stable name, sharing
+        the service's executable cache and hit/miss counters. Used by the
+        serving step so repeated ``make_serve_step`` calls for the same model
+        reuse one compiled entry point."""
+        key = ("__fn__", name, (), ())
+        with self._lock:
+            cached = self._exec.get(key)
+            if cached is not None:
+                self.stats["exec_hit"] += 1
+                return cached
+            self.stats["exec_miss"] += 1
+        jitted = jax.jit(fn) if self.jit else fn
+        with self._lock:
+            return self._exec.setdefault(key, jitted)
+
+
+# -- module-level default service (the one-liner API) ---------------------------
+
+_default: DispatchService | None = None
+_default_lock = threading.Lock()
+
+
+def get_service() -> DispatchService:
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = DispatchService()
+        return _default
+
+
+def configure(store: TuningStore | str | None = None, **kw) -> DispatchService:
+    """(Re)build the process-wide default service, e.g.
+    ``configure("results/store", tuner=BackgroundTuner(...))``."""
+    global _default
+    if isinstance(store, str):
+        store = TuningStore(store)
+    with _default_lock:
+        _default = DispatchService(store, **kw)
+        return _default
+
+
+def dispatch(kernel: str, *args, **static_kw) -> Callable:
+    return get_service().dispatch(kernel, *args, **static_kw)
+
+
+def call(kernel: str, *args, **static_kw):
+    return get_service().call(kernel, *args, **static_kw)

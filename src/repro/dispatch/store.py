@@ -1,0 +1,222 @@
+"""TuningStore: the persistent, process-safe store of best-known configs.
+
+Layout on disk (``<path>/``):
+
+  * ``store.jsonl`` — append-only log, one :class:`TuningRecord` per line.
+    The in-memory view keeps, per ``(kernel, signature, backend)`` key, the
+    record with the lowest objective; the log keeps full history until
+    :meth:`compact` rewrites it to bests-only.
+  * ``store.lock``  — advisory ``flock`` file serializing writers across
+    processes. Readers re-tail the log (:meth:`refresh`) from their last
+    byte offset, so concurrent campaigns publishing results are picked up
+    without re-parsing the whole file.
+
+This is the reuse layer the extended paper calls the "evaluation database
+across datasets": offline :class:`~repro.core.database.PerformanceDatabase`
+campaign directories are ingested via :meth:`ingest_database`, and live
+(background) campaigns publish through :meth:`put` — a hot-swap, since every
+reader's next :meth:`refresh` sees the better config.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Iterator, Mapping
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: single-process best effort
+    fcntl = None
+
+from repro.core.jsonl import append_jsonl, repair_torn_tail
+from repro.dispatch.signature import (
+    ShapeSignature,
+    parse_signature_key,
+    signature_key,
+)
+
+__all__ = ["TuningRecord", "TuningStore"]
+
+
+@dataclasses.dataclass
+class TuningRecord:
+    kernel: str
+    signature: ShapeSignature
+    backend: str
+    config: dict
+    objective: float
+    n_evals: int = 0
+    source: str = ""          # e.g. "campaign:results/syr2k_rf", "background"
+    created: float = 0.0      # unix seconds; 0 = unknown (legacy)
+
+    def key(self) -> tuple:
+        return (self.kernel, signature_key(self.signature), self.backend)
+
+    def age_sec(self, now: float | None = None) -> float:
+        if not self.created:
+            return float("inf")
+        return (now if now is not None else time.time()) - self.created
+
+    def to_json(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "signature": signature_key(self.signature),
+            "backend": self.backend,
+            "config": self.config,
+            "objective": self.objective,
+            "n_evals": self.n_evals,
+            "source": self.source,
+            "created": self.created,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "TuningRecord":
+        return cls(
+            kernel=str(d["kernel"]),
+            signature=parse_signature_key(str(d["signature"])),
+            backend=str(d["backend"]),
+            config=dict(d["config"]),
+            objective=float(d["objective"]),
+            n_evals=int(d.get("n_evals", 0)),
+            source=str(d.get("source", "")),
+            created=float(d.get("created", 0.0)),
+        )
+
+
+class TuningStore:
+    """Best-config store keyed by ``(kernel, shape-signature, backend)``."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self._best: dict[tuple, TuningRecord] = {}
+        self._offset = 0  # bytes of store.jsonl already folded into _best
+        self.refresh()
+
+    # -- paths / locking --------------------------------------------------------
+
+    def _log_path(self) -> str:
+        return os.path.join(self.path, "store.jsonl")
+
+    @contextlib.contextmanager
+    def _lock(self) -> Iterator[None]:
+        lock_path = os.path.join(self.path, "store.lock")
+        f = open(lock_path, "a+")
+        try:
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            yield
+        finally:
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+            f.close()
+
+    # -- read side --------------------------------------------------------------
+
+    def refresh(self) -> int:
+        """Fold any log lines appended since the last read (by this or any
+        other process) into the in-memory best view. Returns #records read."""
+        path = self._log_path()
+        if not os.path.exists(path):
+            return 0
+        n = 0
+        with open(path) as f:
+            f.seek(self._offset)
+            for line in f:
+                if not line.endswith("\n"):
+                    break  # torn tail from a writer mid-append; retry next refresh
+                self._offset += len(line.encode())
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = TuningRecord.from_json(json.loads(line))
+                except (json.JSONDecodeError, KeyError, ValueError):
+                    continue
+                self._fold(rec)
+                n += 1
+        return n
+
+    def _fold(self, rec: TuningRecord) -> None:
+        cur = self._best.get(rec.key())
+        if cur is None or rec.objective <= cur.objective:
+            self._best[rec.key()] = rec
+
+    def __len__(self) -> int:
+        return len(self._best)
+
+    def get(self, kernel: str, signature: ShapeSignature, backend: str) -> TuningRecord | None:
+        return self._best.get((kernel, signature_key(signature), backend))
+
+    def records(self, kernel: str | None = None, backend: str | None = None) -> list[TuningRecord]:
+        return [
+            r for r in self._best.values()
+            if (kernel is None or r.kernel == kernel)
+            and (backend is None or r.backend == backend)
+        ]
+
+    # -- write side -------------------------------------------------------------
+
+    def put(self, rec: TuningRecord, force: bool = False) -> bool:
+        """Publish a record. Only a strict improvement (or ``force``) for an
+        existing key is appended; returns whether the record was accepted."""
+        if not rec.created:
+            rec = dataclasses.replace(rec, created=time.time())
+        with self._lock():
+            # terminate a crashed writer's torn tail so our append does not
+            # merge into the fragment; refresh then skips the isolated line
+            repair_torn_tail(self._log_path())
+            self.refresh()  # fold concurrent writers before deciding
+            cur = self._best.get(rec.key())
+            if cur is not None and not force and rec.objective >= cur.objective:
+                return False
+            self._offset += append_jsonl(self._log_path(), rec.to_json(), fsync=True)
+            self._fold(rec)
+            return True
+
+    def ingest_database(
+        self,
+        db_path: str,
+        kernel: str,
+        signature: ShapeSignature,
+        backend: str,
+        source: str | None = None,
+    ) -> TuningRecord | None:
+        """Populate from an existing campaign result dir (results.jsonl/.json).
+        Publishes the campaign's best evaluated config; returns it (or None
+        when the campaign has no successful evaluation or no improvement)."""
+        from repro.core.database import PerformanceDatabase
+
+        db = PerformanceDatabase(db_path)
+        best = db.best()
+        if best is None:
+            return None
+        rec = TuningRecord(
+            kernel=kernel,
+            signature=signature,
+            backend=backend,
+            config=dict(best.config),
+            objective=float(best.objective),
+            n_evals=len(db),
+            source=source or f"campaign:{db_path}",
+        )
+        return rec if self.put(rec) else None
+
+    def compact(self) -> int:
+        """Rewrite the log keeping only the current best per key. Returns the
+        number of surviving records."""
+        with self._lock():
+            self.refresh()
+            tmp = self._log_path() + ".tmp"
+            with open(tmp, "w") as f:
+                for rec in self._best.values():
+                    f.write(json.dumps(rec.to_json()) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._log_path())
+            self._offset = os.path.getsize(self._log_path())
+            return len(self._best)

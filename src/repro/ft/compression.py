@@ -46,7 +46,7 @@ def compressed_psum(x: jnp.ndarray, axis_name: str, dtype=jnp.int8):
     if dtype == jnp.bfloat16:
         q = x.astype(jnp.bfloat16)
         return jax.lax.psum(q, axis_name).astype(jnp.float32)
-    n = jax.lax.axis_size(axis_name)
+    n = jax.lax.psum(1, axis_name)  # axis size (works across jax versions)
     amax = jnp.max(jnp.abs(x)) + 1e-12
     gmax = jax.lax.pmax(amax, axis_name)
     scale = gmax / 127.0

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 __all__ = [
     "syr2k_ref", "mm3_ref", "lu_ref", "heat3d_ref", "covariance_ref",
     "floyd_warshall_ref", "init_syr2k", "init_mm3", "init_lu", "init_heat3d",
-    "init_covariance", "init_floyd_warshall",
+    "init_covariance", "init_floyd_warshall", "problem_signature",
 ]
 
 
@@ -153,3 +153,34 @@ def init_floyd_warshall(N: int, dtype=jnp.float32, seed: int = 0):
     w = jax.random.uniform(jax.random.PRNGKey(seed), (N, N), dtype, 1.0, 10.0)
     w = w.at[jnp.arange(N), jnp.arange(N)].set(0.0)
     return (w,)
+
+
+# ---------------------------------------------------------------------------
+# problem signatures: paper problem dims -> per-argument shape signature,
+# mirroring the init_* array shapes above. This is the SAME signature
+# repro.dispatch derives from the runtime args, so configs published from
+# offline campaigns (autotune CLI --store, pallas_tuning) resolve at
+# dispatch() time instead of being structurally incompatible.
+# ---------------------------------------------------------------------------
+
+
+def problem_signature(name: str, *dims: int) -> tuple:
+    if name == "syr2k":
+        N, M = dims
+        return ((N, N), (N, M), (N, M))
+    if name == "mm3":
+        P, Q, R, S, T = dims
+        return ((P, Q), (Q, R), (R, S), (S, T))
+    if name == "lu":
+        (N,) = dims
+        return ((N, N),)
+    if name == "heat3d":
+        N, tsteps = dims
+        return ((N, N, N), (tsteps,))
+    if name == "covariance":
+        N, M = dims
+        return ((N, M),)
+    if name == "floyd_warshall":
+        (N,) = dims
+        return ((N, N),)
+    raise KeyError(f"unknown kernel {name!r}")

@@ -30,6 +30,7 @@ from repro.kernels.util import cdiv, pad_to, unpad
 __all__ = [
     "blocked_matmul_host", "syr2k_host", "mm3_host", "lu_host", "heat3d_host",
     "covariance_host", "floyd_warshall_host", "HOST_VARIANTS", "naive_fns",
+    "DISPATCH_BUILDERS", "register_dispatch_variants",
 ]
 
 _bar = jax.lax.optimization_barrier
@@ -259,7 +260,8 @@ def floyd_warshall_variant(path, *, bs, bi=128, bj=128, unroll=1):
 
 
 # ---------------------------------------------------------------------------
-# factories: kernel name -> (factory(config) -> (fn, args)) for TimingEvaluator
+# builders: config (+ static knobs) -> fn(*arrays). One shared definition
+# feeds both the TimingEvaluator factories below and the dispatch registry.
 # ---------------------------------------------------------------------------
 
 
@@ -267,83 +269,105 @@ def _ints(cfg: Mapping[str, Any], *names) -> dict:
     return {n: _as_int(cfg[n]) for n in names if n in cfg}
 
 
-def syr2k_host(problem):
-    C, A, B = problem
+def syr2k_builder(cfg: Mapping[str, Any]):
+    kw = _ints(cfg, "bi", "bj", "bk")
+    kw.update(interchange=bool(cfg.get("interchange", False)),
+              pack_a=bool(cfg.get("pack_a", False)),
+              pack_b=bool(cfg.get("pack_b", False)))
+    return functools.partial(syr2k_variant, alpha=1.5, beta=1.2, **kw)
 
+
+def mm3_builder(cfg: Mapping[str, Any]):
+    kw = _ints(cfg, "bm", "bn", "bk")
+
+    def fn(a, b, c, d):
+        E = blocked_matmul_host(a, b, pack=bool(cfg.get("pack1", True)),
+                                interchange=bool(cfg.get("inter1", False)), **kw)
+        F = blocked_matmul_host(c, d, pack=bool(cfg.get("pack2", True)),
+                                interchange=bool(cfg.get("inter2", False)), **kw)
+        return blocked_matmul_host(E, F, pack=bool(cfg.get("pack3", True)),
+                                   interchange=bool(cfg.get("inter3", False)), **kw)
+
+    return fn
+
+
+def lu_builder(cfg: Mapping[str, Any]):
+    kw = _ints(cfg, "bs", "bm", "bn")
+    return functools.partial(lu_variant, pack=bool(cfg.get("pack", True)), **kw)
+
+
+def heat3d_builder(cfg: Mapping[str, Any], tsteps: int = 8):
+    return functools.partial(heat3d_variant, tsteps=tsteps,
+                             bi=_as_int(cfg["bi"]), fuse_t=_as_int(cfg.get("fuse_t", 1)))
+
+
+def covariance_builder(cfg: Mapping[str, Any]):
+    kw = _ints(cfg, "bi", "bj", "bk")
+    return functools.partial(covariance_variant,
+                             fuse_center=bool(cfg.get("fuse_center", True)),
+                             interchange=bool(cfg.get("interchange", False)), **kw)
+
+
+def floyd_warshall_builder(cfg: Mapping[str, Any]):
+    return functools.partial(floyd_warshall_variant,
+                             **_ints(cfg, "bs", "bi", "bj", "unroll"))
+
+
+DISPATCH_BUILDERS = {
+    "syr2k": syr2k_builder,
+    "mm3": mm3_builder,
+    "lu": lu_builder,
+    "heat3d": heat3d_builder,
+    "covariance": covariance_builder,
+    "floyd_warshall": floyd_warshall_builder,
+}
+
+
+def register_dispatch_variants() -> None:
+    """Register every host kernel into the repro.dispatch registry (called
+    lazily by the registry itself, idempotent by construction)."""
+    from repro.dispatch.registry import register
+    from repro.kernels.spaces import kernel_space
+
+    for name, builder in DISPATCH_BUILDERS.items():
+        register(name, builder,
+                 space=functools.partial(kernel_space, name))
+
+
+# ---------------------------------------------------------------------------
+# factories: kernel name -> (factory(config) -> (fn, args)) for TimingEvaluator
+# ---------------------------------------------------------------------------
+
+
+def _host_factory(builder, problem, **static_kw):
     def factory(cfg):
-        kw = _ints(cfg, "bi", "bj", "bk")
-        kw.update(interchange=bool(cfg.get("interchange", False)),
-                  pack_a=bool(cfg.get("pack_a", False)),
-                  pack_b=bool(cfg.get("pack_b", False)))
-        fn = functools.partial(syr2k_variant, alpha=1.5, beta=1.2, **kw)
-        return fn, (C, A, B)
+        return builder(cfg, **static_kw), problem
 
     return factory
+
+
+def syr2k_host(problem):
+    return _host_factory(syr2k_builder, problem)
 
 
 def mm3_host(problem):
-    A, B, C, D = problem
-
-    def factory(cfg):
-        kw = _ints(cfg, "bm", "bn", "bk")
-
-        def fn(a, b, c, d):
-            E = blocked_matmul_host(a, b, pack=bool(cfg.get("pack1", True)),
-                                    interchange=bool(cfg.get("inter1", False)), **kw)
-            F = blocked_matmul_host(c, d, pack=bool(cfg.get("pack2", True)),
-                                    interchange=bool(cfg.get("inter2", False)), **kw)
-            return blocked_matmul_host(E, F, pack=bool(cfg.get("pack3", True)),
-                                       interchange=bool(cfg.get("inter3", False)), **kw)
-
-        return fn, (A, B, C, D)
-
-    return factory
+    return _host_factory(mm3_builder, problem)
 
 
 def lu_host(problem):
-    (A,) = problem
-
-    def factory(cfg):
-        kw = _ints(cfg, "bs", "bm", "bn")
-        fn = functools.partial(lu_variant, pack=bool(cfg.get("pack", True)), **kw)
-        return fn, (A,)
-
-    return factory
+    return _host_factory(lu_builder, problem)
 
 
 def heat3d_host(problem, tsteps):
-    (A,) = problem
-
-    def factory(cfg):
-        fn = functools.partial(heat3d_variant, tsteps=tsteps,
-                               bi=_as_int(cfg["bi"]), fuse_t=_as_int(cfg.get("fuse_t", 1)))
-        return fn, (A,)
-
-    return factory
+    return _host_factory(heat3d_builder, problem, tsteps=tsteps)
 
 
 def covariance_host(problem):
-    (data,) = problem
-
-    def factory(cfg):
-        kw = _ints(cfg, "bi", "bj", "bk")
-        fn = functools.partial(covariance_variant,
-                               fuse_center=bool(cfg.get("fuse_center", True)),
-                               interchange=bool(cfg.get("interchange", False)), **kw)
-        return fn, (data,)
-
-    return factory
+    return _host_factory(covariance_builder, problem)
 
 
 def floyd_warshall_host(problem):
-    (path,) = problem
-
-    def factory(cfg):
-        kw = _ints(cfg, "bs", "bi", "bj", "unroll")
-        fn = functools.partial(floyd_warshall_variant, **kw)
-        return fn, (path,)
-
-    return factory
+    return _host_factory(floyd_warshall_builder, problem)
 
 
 HOST_VARIANTS = {

@@ -5,6 +5,12 @@
 
 Kernels are tuned on the host-timed backend (B1) at bench sizes; pass
 --backend cost for the TPU-model backend (B2) at paper LARGE sizes.
+
+--warm-start STORE_DIR seeds the campaign from a repro.dispatch TuningStore:
+the store's nearest tuned config (by log-scale shape distance) is evaluated
+first and its neighbors seed the surrogate, so a warmed campaign reaches the
+prior optimum in a fraction of the cold-start budget. --store STORE_DIR
+publishes this campaign's winner back (both flags may name the same dir).
 """
 
 from __future__ import annotations
@@ -29,6 +35,25 @@ BENCH_PROBLEMS = {
     "floyd_warshall": lambda: (V.floyd_warshall_host(R.init_floyd_warshall(240)), None),
 }
 
+# problem dims behind BENCH_PROBLEMS (heat3d includes its tsteps knob)
+BENCH_DIMS = {
+    "syr2k": (240, 200),
+    "mm3": (200, 180, 160, 150, 170),
+    "lu": (256,),
+    "heat3d": (40, 8),
+    "covariance": (300, 240),
+    "floyd_warshall": (240,),
+}
+
+
+def _signature(kernel: str, backend: str):
+    """Per-argument store signature — the same scheme repro.dispatch derives
+    from runtime args, so published configs resolve at dispatch() time."""
+    if backend == "cost":
+        from benchmarks.pallas_tuning import LARGE_SHAPES
+        return R.problem_signature(kernel, *LARGE_SHAPES[kernel])
+    return R.problem_signature(kernel, *BENCH_DIMS[kernel])
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -39,6 +64,10 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="host", choices=["host", "cost"])
     ap.add_argument("--db", default=None, help="performance database directory")
     ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--warm-start", default=None, metavar="STORE_DIR",
+                    help="TuningStore to warm-start from (nearest-neighbor seed)")
+    ap.add_argument("--store", default=None, metavar="STORE_DIR",
+                    help="TuningStore to publish this campaign's best into")
     args = ap.parse_args(argv)
 
     if args.backend == "host":
@@ -50,8 +79,35 @@ def main(argv=None) -> int:
         evaluator = make_evaluator(args.kernel)
         space = kernel_space(args.kernel, target="tpu", seed=args.seed)
 
+    sig = _signature(args.kernel, args.backend)
+    warm_cfgs, warm_recs = None, None
+    if args.warm_start:
+        from repro.dispatch import TuningStore, resolve, signature_distance
+        ws = TuningStore(args.warm_start)
+        hit = resolve(ws, args.kernel, sig, args.backend)
+        if hit is not None:
+            warm_cfgs = [dict(hit.config)]
+            ranked = sorted(
+                ws.records(kernel=args.kernel, backend=args.backend),
+                key=lambda r: signature_distance(sig, r.signature))
+            warm_recs = [(dict(r.config), r.objective) for r in ranked[:3]
+                         if signature_distance(sig, r.signature) != float("inf")]
+            print(f"warm-start: seeded from {len(warm_recs)} store record(s), "
+                  f"nearest at distance {hit.distance:.3f}")
+        else:
+            print("warm-start: store has no compatible record; cold start")
+
     res = autotune(space, evaluator, max_evals=args.max_evals,
-                   learner=args.learner, seed=args.seed, db_path=args.db)
+                   learner=args.learner, seed=args.seed, db_path=args.db,
+                   warm_start=warm_cfgs, warm_start_records=warm_recs)
+
+    if args.store and res.best is not None:
+        from repro.dispatch import TuningRecord, TuningStore
+        TuningStore(args.store).put(TuningRecord(
+            kernel=args.kernel, signature=sig, backend=args.backend,
+            config=dict(res.best.config), objective=float(res.best.objective),
+            n_evals=len(res.db), source=f"cli:{args.db or 'ephemeral'}"))
+
     print(res.summary())
     print(json.dumps({
         "best_config": res.best.config,

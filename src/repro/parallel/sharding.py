@@ -34,6 +34,14 @@ __all__ = ["ShardingProfile", "make_profile", "param_specs", "batch_specs",
            "cache_specs", "named", "mesh_axis_size"]
 
 
+def _ax(a):
+    """Canonical PartitionSpec entry: a singleton axis tuple means the same
+    sharding as the bare axis name — unwrap it so specs compare cleanly."""
+    if isinstance(a, tuple) and len(a) == 1:
+        return a[0]
+    return a
+
+
 def mesh_axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1
@@ -54,7 +62,7 @@ class ShardingProfile:
     tp_axis: str = "model"
 
     def batch_spec(self, extra_dims: int = 1) -> P:
-        return P(self.batch_axes if self.batch_axes else None,
+        return P(_ax(self.batch_axes) if self.batch_axes else None,
                  *([None] * extra_dims))
 
 
@@ -117,14 +125,15 @@ def _leaf_spec(path: tuple, shape: tuple, mesh: Mesh, profile: ShardingProfile,
     body = rank - 1 if stacked else rank  # dims excluding the leading L
 
     def with_stack(spec_dims: list) -> P:
+        spec_dims = [_ax(d) for d in spec_dims]
         return P(None, *spec_dims) if stacked else P(*spec_dims)
 
     # embeddings: (V, d) — vocab over tp, d over fsdp
     if leaf in ("embed",):
         return P(tp if _divides(shape[0], mesh, tp) else None,
-                 fsdp if _divides(shape[1], mesh, fsdp) else None)
+                 _ax(fsdp) if _divides(shape[1], mesh, fsdp) else None)
     if leaf == "unembed":
-        return P(fsdp if _divides(shape[0], mesh, fsdp) else None,
+        return P(_ax(fsdp) if _divides(shape[0], mesh, fsdp) else None,
                  tp if _divides(shape[1], mesh, tp) else None)
 
     # MoE expert tensors: (L?, E, d_in, d_out)
@@ -186,7 +195,7 @@ def named(mesh: Mesh, spec_tree):
 
 
 def batch_specs(batch_abstract: Any, mesh: Mesh, profile: ShardingProfile):
-    b = profile.batch_axes if profile.batch_axes else None
+    b = _ax(profile.batch_axes) if profile.batch_axes else None
 
     def spec(path, leaf):
         return P(b, *([None] * (len(leaf.shape) - 1)))
@@ -199,7 +208,7 @@ def cache_specs(cache_abstract: Any, mesh: Mesh, profile: ShardingProfile,
     """KV caches: (L, B, S, K, hd) — batch over batch_axes, then K over tp if
     divisible else hd; MLA latents: (L, B, S, lora) — lora over tp; SSM state:
     (L, B, H, P, N) — H over tp."""
-    b = profile.batch_axes if profile.batch_axes else None
+    b = _ax(profile.batch_axes) if profile.batch_axes else None
     tp = profile.tp_axis
 
     def spec(path, leaf):

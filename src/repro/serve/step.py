@@ -32,8 +32,13 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, **fw_kw):
     return logits, cache
 
 
-def make_serve_step(cfg: ArchConfig, *, mla_absorb: bool = True):
-    """serve_step(params, cache, token, pos) -> (next_token, logits, cache)."""
+def make_serve_step(cfg: ArchConfig, *, mla_absorb: bool = True, service=None):
+    """serve_step(params, cache, token, pos) -> (next_token, logits, cache).
+
+    With a :class:`repro.dispatch.DispatchService`, the step is routed
+    through the service's compiled-executable cache: every caller asking for
+    the same model config shares one jitted entry point, and the service's
+    hit/miss counters cover serving traffic alongside kernel dispatches."""
 
     def serve_step(params, cache, token, pos):
         logits, cache = decode_step(params, cache, token, pos, cfg,
@@ -41,19 +46,25 @@ def make_serve_step(cfg: ArchConfig, *, mla_absorb: bool = True):
         nxt = jnp.argmax(logits, axis=-1).astype(token.dtype)[:, None]
         return nxt, logits, cache
 
+    if service is not None:
+        # key on the full dataclass repr: two configs sharing a name (e.g. a
+        # full model and its reduced() variant) must not share a closure
+        return service.jit_cached(
+            f"serve_step/{cfg!r}/absorb={mla_absorb}", serve_step)
     return serve_step
 
 
 def greedy_decode(params, cfg: ArchConfig, prompt: jnp.ndarray, steps: int,
-                  max_len: int, **fw_kw):
-    """prompt: (B, S). Returns (B, steps) generated ids."""
+                  max_len: int, service=None, **fw_kw):
+    """prompt: (B, S). Returns (B, steps) generated ids. ``service`` routes
+    the decode step through a dispatch service's executable cache."""
     batch = {"tokens": prompt}
     if cfg.family == "audio":
         batch["enc_embed"] = fw_kw.pop("enc_embed")
     logits, cache = prefill(params, batch, cfg, max_len, **fw_kw)
     B, S = prompt.shape
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(prompt.dtype)[:, None]
-    serve = make_serve_step(cfg)
+    serve = make_serve_step(cfg, service=service)
 
     def body(carry, t):
         tok, cache = carry

@@ -174,7 +174,7 @@ def test_compressed_psum_int8_wire_dtype():
     import re
 
     import numpy as np
-    from jax import shard_map
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("d",))

@@ -49,15 +49,50 @@ def test_persistence_roundtrip(tmp_path):
     assert db2.records[1].info["error"] == "boom"
 
 
-def test_json_is_valid_and_atomic(tmp_path):
+def test_jsonl_appends_one_line_per_record(tmp_path):
     path = str(tmp_path / "db")
     db = PerformanceDatabase(path)
     for i in range(5):
         db.add({"i": i}, float(i))
-    with open(os.path.join(path, "results.json")) as f:
-        data = json.load(f)
+    with open(os.path.join(path, "results.jsonl")) as f:
+        data = [json.loads(line) for line in f if line.strip()]
     assert [d["config"]["i"] for d in data] == list(range(5))
-    assert not os.path.exists(os.path.join(path, "results.json.tmp"))
+
+
+def test_legacy_results_json_loads_and_migrates(tmp_path):
+    path = str(tmp_path / "db")
+    os.makedirs(path)
+    legacy = [
+        {"index": 0, "config": {"i": 0}, "objective": 4.0, "elapsed_sec": 0.1},
+        {"index": 1, "config": {"i": 1}, "objective": 2.0, "elapsed_sec": 0.2},
+    ]
+    with open(os.path.join(path, "results.json"), "w") as f:
+        json.dump(legacy, f)
+    db = PerformanceDatabase(path)
+    assert len(db) == 2
+    assert db.best().objective == 2.0
+    # migrated: future opens read the jsonl (full history preserved)
+    assert os.path.exists(os.path.join(path, "results.jsonl"))
+    db.add({"i": 2}, 1.0)
+    db2 = PerformanceDatabase(path)
+    assert len(db2) == 3
+    assert db2.best().objective == 1.0
+
+
+def test_jsonl_ignores_torn_final_line(tmp_path):
+    path = str(tmp_path / "db")
+    db = PerformanceDatabase(path)
+    db.add({"i": 0}, 1.0)
+    db.add({"i": 1}, 2.0)
+    with open(os.path.join(path, "results.jsonl"), "a") as f:
+        f.write('{"index": 2, "config": {"i"')  # crash mid-append
+    db2 = PerformanceDatabase(path)
+    assert len(db2) == 2
+    # resumed appends must not merge into the torn fragment
+    db2.add({"i": 3}, 0.5)
+    db3 = PerformanceDatabase(path)
+    assert len(db3) == 3
+    assert db3.best().objective == 0.5
 
 
 def test_importance_report_ranks_influential_param():

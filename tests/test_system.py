@@ -51,7 +51,7 @@ def test_campaign_database_files(tmp_path):
     autotune(kernel_space("syr2k", target="host"), ev, max_evals=6,
              learner="ET", seed=0, db_path=db_path)
     assert os.path.exists(os.path.join(db_path, "results.csv"))
-    assert os.path.exists(os.path.join(db_path, "results.json"))
+    assert os.path.exists(os.path.join(db_path, "results.jsonl"))
     db = PerformanceDatabase(db_path)
     assert len(db) == 6
 

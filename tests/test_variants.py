@@ -3,6 +3,7 @@
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref as R
