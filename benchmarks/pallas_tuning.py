@@ -25,7 +25,8 @@ from repro.kernels.cost import kernel_cost
 from repro.kernels.spaces import kernel_space
 from repro.perf.roofline import HW
 
-# the paper's LARGE dataset sizes per kernel
+# the paper's LARGE dataset sizes per kernel; the model kernels (serving hot
+# path) use a 16-head 4k-context serving shape as their "LARGE" analog
 LARGE_SHAPES = {
     "syr2k": (1200, 1000),
     "mm3": (800, 900, 1000, 1100, 1200),
@@ -33,6 +34,8 @@ LARGE_SHAPES = {
     "heat3d": (120, 500),
     "covariance": (1400, 1200),
     "floyd_warshall": (2800,),
+    "flash_attention": (16, 4096, 4096, 128),
+    "matmul": (2000, 2300, 2600),
 }
 
 DEFAULTS_TPU = {
@@ -42,6 +45,8 @@ DEFAULTS_TPU = {
     "heat3d": dict(bi=8, fuse_t=1),
     "covariance": dict(bi=128, bj=128, bk=256),
     "floyd_warshall": dict(bs=64, bi=128, bj=128, unroll=1),
+    "flash_attention": dict(impl="pallas", bq=128, bk=128),
+    "matmul": dict(bm=128, bn=128, bk=128, pack=True),
 }
 
 

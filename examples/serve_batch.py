@@ -3,6 +3,11 @@ the per-family cache (GQA ring cache for windowed archs, MLA latents for
 DeepSeek, SSM state for Mamba2).
 
     PYTHONPATH=src python examples/serve_batch.py --arch mamba2-780m
+
+--store STORE_DIR attaches a repro.dispatch service: prefill attention and
+the decode matmuls resolve tuned block shapes from the TuningStore by shape
+signature (write-time bucketed, so jittery batch sizes share records), and
+the dispatch stats line shows where each resolution came from.
 """
 
 import argparse
@@ -23,12 +28,19 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--store", default=None, metavar="STORE_DIR",
+                    help="TuningStore dir: serve through repro.dispatch")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_reduced(args.arch), dtype=jnp.float32)
     params = init_params(cfg, jax.random.PRNGKey(0))
     print(f"== serving {cfg.name} (reduced): batch={args.batch}, "
           f"cache/token={cache_bytes_per_token(cfg)} bytes")
+
+    svc = None
+    if args.store:
+        from repro.dispatch import DispatchService, TuningStore
+        svc = DispatchService(TuningStore(args.store, bucket=True))
 
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
@@ -38,9 +50,11 @@ def main():
             jax.random.PRNGKey(2), (args.batch, cfg.encoder_len, cfg.d_model))
     t0 = time.time()
     out = greedy_decode(params, cfg, prompt, steps=args.gen,
-                        max_len=args.prompt_len + args.gen, **kw)
+                        max_len=args.prompt_len + args.gen, service=svc, **kw)
     jax.block_until_ready(out)
     print(f"   generated {args.batch}x{args.gen} ids in {time.time()-t0:.1f}s")
+    if svc is not None:
+        print(f"   dispatch stats: {svc.stats}")
     for b in range(min(2, args.batch)):
         print(f"   request {b}: {out[b].tolist()}")
 

@@ -216,7 +216,9 @@ def run_search(
     n_failed = sum(1 for r in db.records if r.status == FAILED)
 
     for cfg in warm_start or []:
-        if len(db) >= max_evals or db.contains(cfg):
+        if len(db) >= max_evals:
+            break  # budget exhausted: later warm configs can't be evaluated either
+        if db.contains(cfg):
             continue
         result = evaluator(cfg)
         rec = search.tell(cfg, result)

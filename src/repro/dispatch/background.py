@@ -21,6 +21,7 @@ import threading
 from typing import Any, Callable
 
 from repro.core.search import run_search
+from repro.core.space import config_key
 from repro.dispatch.signature import ShapeSignature, signature_distance, signature_key
 from repro.dispatch.store import TuningRecord, TuningStore
 
@@ -82,7 +83,10 @@ class BackgroundTuner:
     def _warm_start(self, kernel: str, signature: ShapeSignature, backend: str):
         """Nearest store records become warm-start material: the single
         closest config is re-evaluated first, and up to ``warm_neighbors``
-        neighbors seed the surrogate as virtual observations."""
+        further neighbors seed the surrogate as virtual observations. The
+        re-evaluated config is excluded from the virtual observations —
+        otherwise its real evaluation plus the prior row would double-count
+        that config in the surrogate's training data."""
         ranked = sorted(
             self.store.records(kernel=kernel, backend=backend),
             key=lambda r: signature_distance(signature, r.signature))
@@ -91,9 +95,11 @@ class BackgroundTuner:
         if not ranked:
             return None, None
         configs = [dict(ranked[0].config)]
+        first = config_key(ranked[0].config)
         records = [(dict(r.config), float(r.objective))
-                   for r in ranked[: self.warm_neighbors]]
-        return configs, records
+                   for r in ranked[1 : self.warm_neighbors + 1]
+                   if config_key(r.config) != first]
+        return configs, records or None
 
     def _campaign(self, key, kernel, signature, backend, space, evaluator,
                   max_evals, on_done) -> TuningRecord | None:

@@ -55,9 +55,10 @@ def _ensure_builtins() -> None:
     if _builtins_loaded:
         return
     _builtins_loaded = True
-    from repro.kernels import variants  # registers HOST_VARIANTS builders
+    from repro.kernels import model_kernels, variants
 
-    variants.register_dispatch_variants()
+    variants.register_dispatch_variants()      # PolyBench host kernels
+    model_kernels.register_model_kernels()     # flash attention + matmul
 
 
 def get(name: str) -> VariantSpec:

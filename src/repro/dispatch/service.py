@@ -53,6 +53,7 @@ class DispatchService:
         tuner: Any | None = None,
         jit: bool = True,
         resolve_ttl_sec: float = 30.0,
+        fast_sweep_size: int = 256,
     ):
         self.store = store
         self.backend = backend
@@ -62,12 +63,13 @@ class DispatchService:
         self.tuner = tuner
         self.jit = jit
         self.resolve_ttl_sec = resolve_ttl_sec
+        self.fast_sweep_size = fast_sweep_size
         # signature -> (exec key, monotonic expiry): lets repeat dispatches
         # skip store refresh + nearest-neighbor scan on the hot path
         self._fast: dict[tuple, tuple[tuple, float]] = {}
         self.stats = {
             "store_exact": 0, "store_near": 0, "store_default": 0,
-            "exec_hit": 0, "exec_miss": 0, "bg_enqueued": 0,
+            "exec_hit": 0, "exec_miss": 0, "bg_enqueued": 0, "build_failed": 0,
         }
         self._exec: dict[tuple, Callable] = {}
         self._lock = threading.RLock()
@@ -110,14 +112,16 @@ class DispatchService:
         sig = shape_signature(list(args) + [v for _, v in sorted(static_kw.items())])
         static_id = tuple(sorted(static_kw.items()))
         fast_key = (kernel, signature_key(sig), static_id)
+        now = time.monotonic()
         with self._lock:  # hot path: recent resolution -> zero store traffic
             entry = self._fast.get(fast_key)
             if entry is not None:
                 exec_key, expires = entry
                 fn = self._exec.get(exec_key)
-                if fn is not None and time.monotonic() < expires:
+                if fn is not None and now < expires:
                     self.stats["exec_hit"] += 1
                     return fn
+                del self._fast[fast_key]  # expired or orphaned: don't leak
         config, res = self.resolve_config(kernel, sig)
         key = fast_key + (config_key(config),)
         with self._lock:
@@ -126,13 +130,39 @@ class DispatchService:
                 self.stats["exec_hit"] += 1
             else:
                 self.stats["exec_miss"] += 1
+        built = None
+        if fn is None and res is not None:
+            # a store-resolved config is untrusted input to the serving path:
+            # validate build + abstract trace now, so a poisoned record
+            # degrades to the default config instead of raising at the caller
+            try:
+                built = spec.builder(config, **static_kw)
+                if args:
+                    jax.eval_shape(built, *args)
+            except Exception:
+                with self._lock:
+                    self.stats["build_failed"] += 1
+                # only an exact hit proves the record is bad for its own
+                # signature; a nearest neighbor may merely not transfer to
+                # this shape (e.g. an indivisible block), and quarantining it
+                # would destroy a config that is valid where it was tuned
+                if self.store is not None and res.exact:
+                    self.store.quarantine(res.record)
+                built, res = None, None
+                config = spec.default_config(self.target)
+                key = fast_key + (config_key(config),)
+                with self._lock:
+                    fn = self._exec.get(key)  # default may already be compiled
         if fn is None:
-            built = spec.builder(config, **static_kw)
+            if built is None:
+                built = spec.builder(config, **static_kw)
             fn = jax.jit(built) if self.jit else built
             with self._lock:
                 fn = self._exec.setdefault(key, fn)
         with self._lock:
             self._fast[fast_key] = (key, time.monotonic() + self.resolve_ttl_sec)
+            if len(self._fast) > self.fast_sweep_size:
+                self._sweep_fast_locked(time.monotonic())
         if self.tuner is not None and self.store is not None and self._needs_tuning(res):
             self._enqueue_tuning(spec, kernel, sig, args, static_kw)
         return fn
@@ -161,6 +191,15 @@ class DispatchService:
         self.invalidate(kernel, signature)
 
     # -- cache management --------------------------------------------------------
+
+    def _sweep_fast_locked(self, now: float) -> int:
+        """Drop expired ``_fast`` entries (caller holds the lock). Without
+        this, jittery serving shapes grow the TTL map without bound — expiry
+        was otherwise only checked on hit."""
+        doomed = [k for k, (_, expires) in self._fast.items() if now >= expires]
+        for k in doomed:
+            del self._fast[k]
+        return len(doomed)
 
     def invalidate(self, kernel: str | None = None, signature=None) -> int:
         """Drop executable-cache entries (all, per kernel, or per kernel+sig)

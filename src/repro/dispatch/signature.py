@@ -33,6 +33,10 @@ def _arg_dims(arg: Any) -> tuple:
     shape = getattr(arg, "shape", None)
     if shape is not None:
         return tuple(int(d) for d in shape)
+    if isinstance(arg, bool):
+        # bools must stay distinguishable: max(1, int(·)) would collapse
+        # True and False onto the same dim (e.g. causal/non-causal attention)
+        return (2 if arg else 1,)
     if isinstance(arg, (int, float)):
         return (max(1, int(arg)),)  # static scalar knobs (e.g. tsteps) count as a dim
     if isinstance(arg, (tuple, list)):

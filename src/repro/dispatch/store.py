@@ -33,8 +33,10 @@ except ImportError:  # non-POSIX: single-process best effort
     fcntl = None
 
 from repro.core.jsonl import append_jsonl, repair_torn_tail
+from repro.core.space import config_key
 from repro.dispatch.signature import (
     ShapeSignature,
+    bucket_signature,
     parse_signature_key,
     signature_key,
 )
@@ -88,14 +90,31 @@ class TuningRecord:
 
 
 class TuningStore:
-    """Best-config store keyed by ``(kernel, shape-signature, backend)``."""
+    """Best-config store keyed by ``(kernel, shape-signature, backend)``.
 
-    def __init__(self, path: str):
+    ``bucket=True`` applies write-time signature bucketing: every signature
+    is snapped to powers of ``bucket_base`` (see
+    :func:`~repro.dispatch.signature.bucket_signature`) on both :meth:`put`
+    and :meth:`get`, so jittery serving shapes (batch 33, 34, 35, ...)
+    collapse onto one store key instead of fragmenting the store.
+    """
+
+    def __init__(self, path: str, *, bucket: bool = False, bucket_base: float = 2.0):
         self.path = path
+        self.bucket = bucket
+        self.bucket_base = bucket_base
         os.makedirs(path, exist_ok=True)
         self._best: dict[tuple, TuningRecord] = {}
+        # (kernel, sig-key, backend, config-key) tuples banned from serving;
+        # _quarantined_json keeps the tombstone lines so compact() rewrites them
+        self._quarantined: set[tuple] = set()
+        self._quarantined_json: dict[tuple, dict] = {}
+        self._access: dict[tuple, float] = {}  # in-process LRU clock per key
         self._offset = 0  # bytes of store.jsonl already folded into _best
         self.refresh()
+
+    def _canon(self, sig: ShapeSignature) -> ShapeSignature:
+        return bucket_signature(sig, self.bucket_base) if self.bucket else sig
 
     # -- paths / locking --------------------------------------------------------
 
@@ -134,14 +153,32 @@ class TuningStore:
                 if not line:
                     continue
                 try:
-                    rec = TuningRecord.from_json(json.loads(line))
+                    d = json.loads(line)
+                    rec = TuningRecord.from_json(d)
                 except (json.JSONDecodeError, KeyError, ValueError):
                     continue
-                self._fold(rec)
+                if d.get("quarantined"):
+                    self._apply_quarantine(rec, d)
+                else:
+                    self._fold(rec)
                 n += 1
         return n
 
+    @staticmethod
+    def _qkey(rec: TuningRecord) -> tuple:
+        return rec.key() + (config_key(rec.config),)
+
+    def _apply_quarantine(self, rec: TuningRecord, line: dict) -> None:
+        qk = self._qkey(rec)
+        self._quarantined.add(qk)
+        self._quarantined_json[qk] = line
+        cur = self._best.get(rec.key())
+        if cur is not None and config_key(cur.config) == config_key(rec.config):
+            del self._best[rec.key()]
+
     def _fold(self, rec: TuningRecord) -> None:
+        if self._qkey(rec) in self._quarantined:
+            return
         cur = self._best.get(rec.key())
         if cur is None or rec.objective <= cur.objective:
             self._best[rec.key()] = rec
@@ -150,7 +187,11 @@ class TuningStore:
         return len(self._best)
 
     def get(self, kernel: str, signature: ShapeSignature, backend: str) -> TuningRecord | None:
-        return self._best.get((kernel, signature_key(signature), backend))
+        key = (kernel, signature_key(self._canon(signature)), backend)
+        rec = self._best.get(key)
+        if rec is not None:
+            self._access[key] = time.time()
+        return rec
 
     def records(self, kernel: str | None = None, backend: str | None = None) -> list[TuningRecord]:
         return [
@@ -163,20 +204,39 @@ class TuningStore:
 
     def put(self, rec: TuningRecord, force: bool = False) -> bool:
         """Publish a record. Only a strict improvement (or ``force``) for an
-        existing key is appended; returns whether the record was accepted."""
+        existing key is appended; returns whether the record was accepted.
+        Quarantined (kernel, signature, backend, config) combinations are
+        rejected outright — a poisoned config must not be re-served."""
         if not rec.created:
             rec = dataclasses.replace(rec, created=time.time())
+        rec = dataclasses.replace(rec, signature=self._canon(rec.signature))
         with self._lock():
             # terminate a crashed writer's torn tail so our append does not
             # merge into the fragment; refresh then skips the isolated line
             repair_torn_tail(self._log_path())
             self.refresh()  # fold concurrent writers before deciding
+            if self._qkey(rec) in self._quarantined:
+                return False
             cur = self._best.get(rec.key())
             if cur is not None and not force and rec.objective >= cur.objective:
                 return False
             self._offset += append_jsonl(self._log_path(), rec.to_json(), fsync=True)
             self._fold(rec)
             return True
+
+    def quarantine(self, rec: TuningRecord) -> None:
+        """Ban this record's exact (kernel, signature, backend, config) from
+        being served or re-accepted — the dispatch service calls this when a
+        stored config fails to build or trace. The tombstone is appended to
+        the log, so other processes pick it up on their next refresh."""
+        rec = dataclasses.replace(rec, signature=self._canon(rec.signature))
+        line = rec.to_json()
+        line["quarantined"] = True
+        with self._lock():
+            repair_torn_tail(self._log_path())
+            self.refresh()
+            self._offset += append_jsonl(self._log_path(), line, fsync=True)
+            self._apply_quarantine(rec, line)
 
     def ingest_database(
         self,
@@ -206,17 +266,50 @@ class TuningStore:
         )
         return rec if self.put(rec) else None
 
-    def compact(self) -> int:
-        """Rewrite the log keeping only the current best per key. Returns the
-        number of surviving records."""
+    def compact(
+        self,
+        *,
+        ttl_sec: float | None = None,
+        max_per_kernel: int | None = None,
+    ) -> int:
+        """Rewrite the log keeping only the current best per key, optionally
+        evicting along the way. Returns the number of surviving records.
+
+        * ``ttl_sec`` drops records older than the TTL (records with an
+          unknown ``created`` time have infinite age and are evicted first);
+        * ``max_per_kernel`` is a per-kernel size budget: only the
+          ``max_per_kernel`` most-recently-used keys per kernel survive
+          (LRU by this process's :meth:`get` hits, falling back to the
+          record's ``created`` time for keys never read here).
+
+        Quarantine tombstones survive compaction so a poisoned config stays
+        banned across process restarts."""
         with self._lock():
             self.refresh()
+            now = time.time()
+            survivors = dict(self._best)
+            if ttl_sec is not None:
+                survivors = {k: r for k, r in survivors.items()
+                             if r.age_sec(now) <= ttl_sec}
+            if max_per_kernel is not None:
+                by_kernel: dict[str, list[tuple]] = {}
+                for k, r in survivors.items():
+                    by_kernel.setdefault(r.kernel, []).append((k, r))
+                survivors = {}
+                for items in by_kernel.values():
+                    items.sort(key=lambda kr: self._access.get(kr[0], kr[1].created),
+                               reverse=True)
+                    survivors.update(dict(items[:max_per_kernel]))
             tmp = self._log_path() + ".tmp"
             with open(tmp, "w") as f:
-                for rec in self._best.values():
+                for rec in survivors.values():
                     f.write(json.dumps(rec.to_json()) + "\n")
+                for line in self._quarantined_json.values():
+                    f.write(json.dumps(line) + "\n")
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self._log_path())
+            self._best = survivors
+            self._access = {k: t for k, t in self._access.items() if k in survivors}
             self._offset = os.path.getsize(self._log_path())
             return len(self._best)

@@ -150,6 +150,40 @@ def floyd_warshall_cost(cfg: Mapping, N: int):
     return _finish(t, hbm, vmem, flops)
 
 
+def flash_attention_cost(cfg: Mapping, BH: int, Sq: int, Sk: int, hd: int):
+    """The serving attention kernel. Pallas impl: q/o cross HBM once per
+    q-block row, k/v stream once per q-block sweep (the kernel's BlockSpec
+    index maps); XLA impl: the materializing path additionally round-trips
+    the (Sq, Sk) score tensor."""
+    bq, bk = min(int(cfg.get("bq", 128)), Sq), min(int(cfg.get("bk", 128)), Sk)
+    impl = str(cfg.get("impl", "pallas"))
+    nq, nk = cdiv(Sq, bq), cdiv(Sk, bk)
+    flops = 4.0 * BH * Sq * Sk * hd  # qk^T + pv matmuls
+    if impl == "xla":
+        # score materialization: ~4 HBM passes over (Sq, Sk) f32 scores
+        hbm = BH * (2 * Sq + 2 * Sk) * hd * _BF16 + 4 * BH * Sq * Sk * _F32
+        vmem = (bq * Sk + bq * hd + Sk * hd) * _F32
+        eff = _align_eff(bq, Sk, hd)
+    else:
+        hbm = BH * nq * (2 * bq * hd + nk * 2 * bk * hd) * _BF16
+        vmem = (bq * hd + 2 * bk * hd + bq * hd) * _BF16 \
+            + (bq * hd + 2 * bq) * _F32  # acc + m/l scratch
+        eff = _align_eff(bq, bk, hd)
+    t = max(flops / (HW.peak_flops * eff), hbm / HW.hbm_bw)
+    return _finish(t, hbm, vmem, flops)
+
+
+def matmul_cost(cfg: Mapping, M: int, K: int, N: int):
+    bm = int(cfg.get("bm", 128))
+    bn = int(cfg.get("bn", 128))
+    bk = int(cfg.get("bk", 128))
+    t, hbm, vmem, flops = _mm_cost(M, N, K, bm, bn, bk)
+    if not cfg.get("pack", False):
+        hbm += cdiv(K, bk) * M * N * _F32  # o tile read-modify-written per k step
+        t = max(flops / (HW.peak_flops * _align_eff(bm, bn, bk)), hbm / HW.hbm_bw)
+    return _finish(t, hbm, vmem, flops)
+
+
 KERNEL_COST_FNS = {
     "syr2k": syr2k_cost,
     "mm3": mm3_cost,
@@ -157,6 +191,8 @@ KERNEL_COST_FNS = {
     "heat3d": heat3d_cost,
     "covariance": covariance_cost,
     "floyd_warshall": floyd_warshall_cost,
+    "flash_attention": flash_attention_cost,
+    "matmul": matmul_cost,
 }
 
 

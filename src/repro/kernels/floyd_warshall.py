@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.util import cdiv, default_interpret, pad_to
+from repro.kernels.util import cdiv, default_interpret, pad_to, tpu_compiler_params
 
 __all__ = ["floyd_warshall", "minplus_update"]
 
@@ -82,7 +82,7 @@ def minplus_update(
         ],
         out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(Dp.shape, D.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,

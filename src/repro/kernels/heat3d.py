@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.util import cdiv, default_interpret, pad_to
+from repro.kernels.util import cdiv, default_interpret, pad_to, tpu_compiler_params
 
 __all__ = ["heat3d", "heat3d_step"]
 
@@ -105,7 +105,7 @@ def heat3d_step(
         ],
         out_specs=pl.BlockSpec((bi, n1, n2), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(Ap.shape, A.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)
         ),
         interpret=interpret,

@@ -183,4 +183,11 @@ def problem_signature(name: str, *dims: int) -> tuple:
     if name == "floyd_warshall":
         (N,) = dims
         return ((N, N),)
+    if name == "flash_attention":
+        # trailing (2,) = the static `causal=True` kwarg the service folds in
+        BH, Sq, Sk, hd = dims
+        return ((BH, Sq, hd), (BH, Sk, hd), (BH, Sk, hd), (2,))
+    if name == "matmul":
+        M, K, N = dims
+        return ((M, K), (K, N))
     raise KeyError(f"unknown kernel {name!r}")

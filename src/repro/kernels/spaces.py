@@ -118,6 +118,43 @@ def floyd_warshall_space(target: str = "tpu", seed: int = 1234) -> Configuration
     return cs
 
 
+# ---------------------------------------------------------------------------
+# model-kernel spaces: the serving hot path's schedule knobs (beyond-paper)
+# ---------------------------------------------------------------------------
+
+# flash-attention q/k block sizes; host entries small enough for interpret mode
+FLASH_TILES_TPU = (128, 256, 512, 1024)
+FLASH_TILES_HOST = (16, 32, 64, 128, 256, 512)
+
+
+def flash_attention_space(target: str = "tpu", seed: int = 1234) -> ConfigurationSpace:
+    """Tile space over ``bq``/``bk`` plus the implementation variant axis:
+    the Pallas online-softmax kernel vs the chunked-XLA fallback (which only
+    reads ``bq`` as its query-chunk size)."""
+    cs = ConfigurationSpace(seed=seed)
+    tiles = FLASH_TILES_TPU if target == "tpu" else FLASH_TILES_HOST
+    cs.add_hyperparameters([
+        Categorical("impl", ("pallas", "xla"),
+                    default="pallas" if target == "tpu" else "xla"),
+        Ordinal("bq", tiles, default=128),
+        Ordinal("bk", tiles, default=128),
+    ])
+    return cs
+
+
+def matmul_space(target: str = "tpu", seed: int = 1234) -> ConfigurationSpace:
+    """Blocked-matmul space for the model projection/unembed call sites."""
+    cs = ConfigurationSpace(seed=seed)
+    cs.add_hyperparameters([
+        Categorical("pack", (True, False), default=False),
+        Categorical("interchange", (True, False), default=False),
+        Ordinal("bm", _tiles(target, "a"), default=_tiles(target, "a")[8]),
+        Ordinal("bk", _tiles(target, "b"), default=_tiles(target, "b")[-1]),
+        Ordinal("bn", _tiles(target, "c"), default=_tiles(target, "c")[-1]),
+    ])
+    return cs
+
+
 KERNEL_SPACES = {
     "syr2k": syr2k_space,
     "mm3": mm3_space,
@@ -125,6 +162,8 @@ KERNEL_SPACES = {
     "heat3d": heat3d_space,
     "covariance": covariance_space,
     "floyd_warshall": floyd_warshall_space,
+    "flash_attention": flash_attention_space,
+    "matmul": matmul_space,
 }
 
 

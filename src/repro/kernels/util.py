@@ -6,8 +6,20 @@ import os
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as _pltpu
 
-__all__ = ["default_interpret", "cdiv", "pad_to", "unpad", "TPU_LANE", "TPU_SUBLANE"]
+__all__ = ["default_interpret", "cdiv", "pad_to", "unpad", "tpu_compiler_params",
+           "TPU_LANE", "TPU_SUBLANE"]
+
+# jax < 0.5 names the Mosaic params class TPUCompilerParams; newer releases
+# renamed it CompilerParams — resolve whichever this jax ships
+_CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kw):
+    """Version-portable ``pltpu.CompilerParams`` (e.g. dimension_semantics)."""
+    return _CompilerParams(**kw)
 
 TPU_LANE = 128     # last-dim tile of the TPU vector unit / MXU
 TPU_SUBLANE = 8    # second-to-last-dim tile (f32)

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import EvalResult, TimingEvaluator, autotune
 from repro.core.findmin import importance_report
+from repro.kernels import model_kernels as MK
 from repro.kernels import ref as R
 from repro.kernels import variants as V
 from repro.kernels.spaces import KERNEL_SPACES, kernel_space
@@ -33,6 +34,9 @@ BENCH_PROBLEMS = {
     "heat3d": lambda: (V.heat3d_host(R.init_heat3d(40), tsteps=8), None),
     "covariance": lambda: (V.covariance_host(R.init_covariance(300, 240)), None),
     "floyd_warshall": lambda: (V.floyd_warshall_host(R.init_floyd_warshall(240)), None),
+    "flash_attention": lambda: (
+        MK.flash_attention_host(MK.init_flash_attention(4, 128, 128, 64)), None),
+    "matmul": lambda: (MK.matmul_host(MK.init_matmul(256, 192, 224)), None),
 }
 
 # problem dims behind BENCH_PROBLEMS (heat3d includes its tsteps knob)
@@ -43,6 +47,8 @@ BENCH_DIMS = {
     "heat3d": (40, 8),
     "covariance": (300, 240),
     "floyd_warshall": (240,),
+    "flash_attention": (4, 128, 128, 64),
+    "matmul": (256, 192, 224),
 }
 
 

@@ -19,6 +19,31 @@ __all__ = ["gqa_attention", "gqa_decode", "make_positions"]
 _NEG = -1.0e30
 
 
+def _service_attention(q, k, v, *, causal, service):
+    """Route full (non-windowed) attention through the dispatch service's
+    tuned flash-attention variant. K/V are flattened to the kernel's
+    (batch*kv_heads, seq, head_dim) layout — the shape signature the service
+    resolves tuned ``(bq, bk)`` block shapes against — and the G query heads
+    per kv head run as G calls of the one dispatched executable, so GQA
+    never materializes repeated K/V copies on the hot path. Returns None
+    when the call can't be expressed as a flash kernel (ragged GQA
+    grouping), letting the caller fall back to the chunked path."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    if K == 0 or H % K:
+        return None
+    G = H // K
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    # head h = k*G + g: group axis out front, kv-head axis aligned with kf
+    qg = q.reshape(B, Sq, K, G, hd).transpose(3, 0, 2, 1, 4)  # (G, B, K, Sq, hd)
+    qg = qg.reshape(G, B * K, Sq, hd)
+    fn = service.dispatch("flash_attention", qg[0], kf, vf, causal=causal)
+    og = jnp.stack([fn(qg[g], kf, vf) for g in range(G)])     # (G, B*K, Sq, hd)
+    out = og.reshape(G, B, K, Sq, hd).transpose(1, 3, 2, 0, 4)  # (B, Sq, K, G, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
 def make_positions(B: int, S: int) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
 
@@ -46,7 +71,15 @@ def gqa_attention(
     chunk: int = 512,
     scale: float | None = None,
     f32: bool = True,
+    service=None,
 ) -> jnp.ndarray:
+    # the dispatch path: callers pass a service only when window masking is
+    # statically off (see blocks.attn_layer_train); custom scales and bf16
+    # score accumulation stay on the chunked path for exact-variant parity
+    if service is not None and scale is None and f32:
+        out = _service_attention(q, k, v, causal=causal, service=service)
+        if out is not None:
+            return out
     B, Sq, H, hd = q.shape
     Sk, K = k.shape[1], k.shape[2]
     G = H // K

@@ -15,7 +15,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.attention import gqa_attention, gqa_decode
-from repro.models.common import ArchConfig, dense_init, mrope, rms_norm, rope
+from repro.models.common import (
+    ArchConfig,
+    dense_init,
+    mrope,
+    rms_norm,
+    rope,
+    service_matmul,
+)
 from repro.models.mla import init_mla, mla_attention, mla_decode
 from repro.models.moe import init_mlp, init_moe, mlp, moe_ffn
 from repro.models.ssm import init_mamba2, mamba2_decode, mamba2_forward
@@ -103,9 +110,14 @@ def _qkv(p, h, cfg, positions):
 
 
 def attn_layer_train(p, x, *, cfg: ArchConfig, positions, window=None,
-                     moe: bool = False, causal: bool = True, chunk: int = 512):
+                     moe: bool = False, causal: bool = True, chunk: int = 512,
+                     service=None):
     """Returns (x, aux). positions: (B,S) or (B,3,S) for M-RoPE; window: traced
-    scalar (0 = full attention)."""
+    scalar (0 = full attention). ``service`` routes attention and the output
+    projection through :mod:`repro.dispatch` tuned variants."""
+    # window is a traced per-layer scalar inside the stage scan, so the flash
+    # route is gated statically: only archs with no windowed layers qualify
+    svc_attn = service if not (cfg.sliding_window or cfg.local_global_ratio) else None
     h = rms_norm(x, p["ln1"])
     if cfg.attn_type == "mla":
         attn = mla_attention(p["mla"], h, cfg,
@@ -114,9 +126,9 @@ def attn_layer_train(p, x, *, cfg: ArchConfig, positions, window=None,
     else:
         q, k, v = _qkv(p, h, cfg, positions)
         o = gqa_attention(q, k, v, causal=causal, window=window, chunk=chunk,
-                          f32=cfg.attn_f32)
+                          f32=cfg.attn_f32, service=svc_attn)
         B, S = x.shape[:2]
-        x = x + o.reshape(B, S, -1) @ p["wo"]
+        x = x + service_matmul(o.reshape(B, S, -1), p["wo"], service)
 
     h2 = rms_norm(x, p["ln2"])
     if moe:
@@ -129,9 +141,13 @@ def attn_layer_train(p, x, *, cfg: ArchConfig, positions, window=None,
 
 
 def attn_layer_decode(p, x, cache, pos, *, cfg: ArchConfig, window=None,
-                      moe: bool = False, mla_absorb: bool = True):
+                      moe: bool = False, mla_absorb: bool = True,
+                      service=None):
     """x: (B,1,d); cache: {'k': (B,S,K,hd), 'v': ...} or MLA latent cache.
-    Returns (x, cache, aux)."""
+    Returns (x, cache, aux). ``service`` routes the output projection through
+    the dispatch service's tuned blocked matmul (single-token attention
+    itself stays on the einsum decode path — it is masked by ``pos``, which
+    the flash kernel cannot express)."""
     B = x.shape[0]
     h = rms_norm(x, p["ln1"])
     if cfg.attn_type == "mla":
@@ -153,7 +169,7 @@ def attn_layer_decode(p, x, cache, pos, *, cfg: ArchConfig, window=None,
                                               (0, slot, 0, 0)),
         }
         o = gqa_decode(q, cache["k"], cache["v"], pos, window=window, ring=ring)
-        x = x + o.reshape(B, 1, -1) @ p["wo"]
+        x = x + service_matmul(o.reshape(B, 1, -1), p["wo"], service)
 
     h2 = rms_norm(x, p["ln2"])
     if moe:

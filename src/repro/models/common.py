@@ -9,7 +9,21 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ArchConfig", "rms_norm", "rope", "mrope", "dense_init", "ACT"]
+__all__ = ["ArchConfig", "rms_norm", "rope", "mrope", "dense_init",
+           "service_matmul", "ACT"]
+
+
+def service_matmul(x: jnp.ndarray, w: jnp.ndarray, service=None) -> jnp.ndarray:
+    """``x @ w`` routed through the dispatch service's tuned blocked matmul
+    (per ``(rows, K) x (K, N)`` shape signature); a plain matmul without a
+    service. Leading dims of ``x`` are flattened for the kernel's 2-D
+    contract and restored afterwards."""
+    if service is None:
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    fn = service.dispatch("matmul", x2, w)
+    return fn(x2, w).reshape(*lead, w.shape[-1])
 
 
 # ---------------------------------------------------------------------------

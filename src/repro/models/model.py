@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import blocks as B
-from repro.models.common import ArchConfig, dense_init, rms_norm
+from repro.models.common import ArchConfig, dense_init, rms_norm, service_matmul
 from repro.models.mla import init_mla_cache
 from repro.models.ssm import init_ssm_cache
 
@@ -122,12 +122,13 @@ def _maybe_remat(fn, remat: str):
 
 
 def _scan_attn_stage(params_stack, x, windows, *, cfg, positions, moe, remat,
-                     chunk, act_spec=None):
+                     chunk, act_spec=None, service=None):
     def body(carry, xs):
         x, aux = carry
         p_l, w_l = xs
         x, a = B.attn_layer_train(p_l, x, cfg=cfg, positions=positions,
-                                  window=w_l, moe=moe, chunk=chunk)
+                                  window=w_l, moe=moe, chunk=chunk,
+                                  service=service)
         x = _cst(x, act_spec)
         return (x, aux + a), None
 
@@ -139,8 +140,10 @@ def _scan_attn_stage(params_stack, x, windows, *, cfg, positions, moe, remat,
 
 def forward(params: dict, batch: dict, cfg: ArchConfig, *, remat: str = "none",
             attn_chunk: int = 512, ssm_chunk: int = 64, act_spec=None,
-            logits_spec=None):
-    """Returns (logits, aux_loss)."""
+            logits_spec=None, service=None):
+    """Returns (logits, aux_loss). ``service`` (a
+    :class:`repro.dispatch.DispatchService`) routes attention and the big
+    matmul call sites through tuned, store-resolved kernel variants."""
     tokens = batch["tokens"]
     Bsz, S = tokens.shape
     x = _cst(params["embed"][tokens].astype(cfg.dtype), act_spec)
@@ -157,18 +160,21 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *, remat: str = "none",
         windows = jnp.asarray(B.layer_windows(cfg))
         x, aux = _scan_attn_stage(params["layers"], x, windows, cfg=cfg,
                                   positions=positions, moe=False, remat=remat,
-                                  chunk=attn_chunk, act_spec=act_spec)
+                                  chunk=attn_chunk, act_spec=act_spec,
+                                  service=service)
     elif fam == "moe":
         if "dense0" in params:
             x, a0 = B.attn_layer_train(params["dense0"], x, cfg=cfg,
                                        positions=positions, window=None,
-                                       moe=False, chunk=attn_chunk)
+                                       moe=False, chunk=attn_chunk,
+                                       service=service)
             aux = aux + a0
         n_moe = cfg.n_layers - cfg.first_dense_layers
         windows = jnp.asarray(B.layer_windows(cfg)[cfg.first_dense_layers:])
         x, a = _scan_attn_stage(params["layers"], x, windows, cfg=cfg,
                                 positions=positions, moe=True, remat=remat,
-                                chunk=attn_chunk, act_spec=act_spec)
+                                chunk=attn_chunk, act_spec=act_spec,
+                                service=service)
         aux = aux + a
     elif fam in ("ssm", "hybrid"):
         def mamba_body(x, p_l):
@@ -192,7 +198,7 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *, remat: str = "none",
                 # the shared attention block closes every mamba segment
                 x, _ = B.attn_layer_train(
                     params["shared_attn"], x, cfg=cfg, positions=positions,
-                    window=None, moe=False, chunk=attn_chunk)
+                    window=None, moe=False, chunk=attn_chunk, service=service)
     elif fam == "audio":
         enc = batch["enc_embed"].astype(cfg.dtype)
         enc_pos = jnp.broadcast_to(
@@ -223,9 +229,9 @@ def forward(params: dict, batch: dict, cfg: ArchConfig, *, remat: str = "none",
 
     x = rms_norm(x, params["final_norm"])
     if cfg.tie_embeddings:
-        logits = x @ params["embed"].T.astype(cfg.dtype)
+        logits = service_matmul(x, params["embed"].T.astype(cfg.dtype), service)
     else:
-        logits = x @ params["unembed"]
+        logits = service_matmul(x, params["unembed"], service)
     logits = _cst(logits, logits_spec)
     return logits.astype(jnp.float32), aux
 
@@ -304,8 +310,10 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
 
 
 def decode_step(params: dict, cache: dict, token: jnp.ndarray, pos,
-                cfg: ArchConfig, *, mla_absorb: bool = True):
-    """token: (B, 1) int32; pos: scalar. Returns (logits (B, V), new cache)."""
+                cfg: ArchConfig, *, mla_absorb: bool = True, service=None):
+    """token: (B, 1) int32; pos: scalar. Returns (logits (B, V), new cache).
+    ``service`` routes the decode-path matmul call sites (attention output
+    projection, unembed) through tuned dispatch variants."""
     x = params["embed"][token].astype(cfg.dtype)
     if cfg.name.startswith("gemma"):
         x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
@@ -318,14 +326,15 @@ def decode_step(params: dict, cache: dict, token: jnp.ndarray, pos,
         if "dense0" in params:
             x, c0, _ = B.attn_layer_decode(params["dense0"], x, cache["dense0"],
                                            pos, cfg=cfg, window=None, moe=False,
-                                           mla_absorb=mla_absorb)
+                                           mla_absorb=mla_absorb, service=service)
             new_cache["dense0"] = c0
 
         def body(x, xs):
             p_l, c_l, w_l = xs
             x, c_l, _ = B.attn_layer_decode(p_l, x, c_l, pos, cfg=cfg,
                                             window=w_l, moe=moe,
-                                            mla_absorb=mla_absorb)
+                                            mla_absorb=mla_absorb,
+                                            service=service)
             return x, c_l
 
         x, cs = jax.lax.scan(body, x, (params["layers"], cache["layers"], windows))
@@ -360,7 +369,8 @@ def decode_step(params: dict, cache: dict, token: jnp.ndarray, pos,
             start += seg
             ac = jax.tree_util.tree_map(lambda c: c[site], cache["shared_attn"])
             x, ac, _ = B.attn_layer_decode(params["shared_attn"], x, ac, pos,
-                                           cfg=cfg, window=None, moe=False)
+                                           cfg=cfg, window=None, moe=False,
+                                           service=service)
             attn_caches.append(ac)
             site += 1
         new_cache["layers"] = jax.tree_util.tree_map(
@@ -382,7 +392,7 @@ def decode_step(params: dict, cache: dict, token: jnp.ndarray, pos,
 
     x = rms_norm(x, params["final_norm"])
     if cfg.tie_embeddings:
-        logits = x @ params["embed"].T.astype(cfg.dtype)
+        logits = service_matmul(x, params["embed"].T.astype(cfg.dtype), service)
     else:
-        logits = x @ params["unembed"]
+        logits = service_matmul(x, params["unembed"], service)
     return logits[:, 0, :].astype(jnp.float32), new_cache

@@ -15,17 +15,20 @@ from repro.models.model import decode_step, forward, init_cache
 __all__ = ["prefill", "greedy_decode", "make_serve_step"]
 
 
-def prefill(params, batch, cfg: ArchConfig, max_len: int, **fw_kw):
+def prefill(params, batch, cfg: ArchConfig, max_len: int, service=None, **fw_kw):
     """Run the prompt through the model, then replay it through decode_step to
     fill the cache (simple, correct reference path; a fused prefill-with-cache
-    is a §Perf optimization)."""
-    logits, _ = forward(params, batch, cfg, **fw_kw)
+    is a §Perf optimization). ``service`` routes the prompt forward's
+    attention (tuned flash ``bq``/``bk``) and matmul call sites through
+    :mod:`repro.dispatch` — this is where serving traffic finally meets the
+    tuning store."""
+    logits, _ = forward(params, batch, cfg, service=service, **fw_kw)
     B, S = batch["tokens"].shape
     cache = init_cache(cfg, B, max_len)
 
     def body(cache, t):
         _, cache = decode_step(params, cache, jax.lax.dynamic_slice_in_dim(
-            batch["tokens"], t, 1, axis=1), t, cfg)
+            batch["tokens"], t, 1, axis=1), t, cfg, service=service)
         return cache, None
 
     cache, _ = jax.lax.scan(body, cache, jnp.arange(S))
@@ -36,13 +39,15 @@ def make_serve_step(cfg: ArchConfig, *, mla_absorb: bool = True, service=None):
     """serve_step(params, cache, token, pos) -> (next_token, logits, cache).
 
     With a :class:`repro.dispatch.DispatchService`, the step is routed
-    through the service's compiled-executable cache: every caller asking for
-    the same model config shares one jitted entry point, and the service's
-    hit/miss counters cover serving traffic alongside kernel dispatches."""
+    through the service's compiled-executable cache — every caller asking for
+    the same model config shares one jitted entry point — and the decode
+    matmul call sites inside resolve tuned block shapes from the service's
+    store, so its hit/miss counters cover serving traffic alongside kernel
+    dispatches."""
 
     def serve_step(params, cache, token, pos):
         logits, cache = decode_step(params, cache, token, pos, cfg,
-                                    mla_absorb=mla_absorb)
+                                    mla_absorb=mla_absorb, service=service)
         nxt = jnp.argmax(logits, axis=-1).astype(token.dtype)[:, None]
         return nxt, logits, cache
 
@@ -57,11 +62,12 @@ def make_serve_step(cfg: ArchConfig, *, mla_absorb: bool = True, service=None):
 def greedy_decode(params, cfg: ArchConfig, prompt: jnp.ndarray, steps: int,
                   max_len: int, service=None, **fw_kw):
     """prompt: (B, S). Returns (B, steps) generated ids. ``service`` routes
-    the decode step through a dispatch service's executable cache."""
+    prefill attention and the per-step matmuls through tuned dispatch
+    variants and the decode step through the service's executable cache."""
     batch = {"tokens": prompt}
     if cfg.family == "audio":
         batch["enc_embed"] = fw_kw.pop("enc_embed")
-    logits, cache = prefill(params, batch, cfg, max_len, **fw_kw)
+    logits, cache = prefill(params, batch, cfg, max_len, service=service, **fw_kw)
     B, S = prompt.shape
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(prompt.dtype)[:, None]
     serve = make_serve_step(cfg, service=service)

@@ -58,6 +58,12 @@ def test_bucket_signature_snaps_to_powers():
     assert bucket_signature(((130, 120), (7,))) == ((128, 128), (8,))
 
 
+def test_signature_distinguishes_bool_flags():
+    # causal=True vs causal=False static kwargs must not share store keys
+    assert shape_signature([True]) == ((2,),)
+    assert shape_signature([False]) == ((1,),)
+
+
 # ---------------------------------------------------------------------------
 # store
 # ---------------------------------------------------------------------------
@@ -187,6 +193,22 @@ def _toy_evaluator(cfg):
 
 register("toy_scale", builder=lambda cfg: lambda x: x * cfg["s"],
          space=_toy_space, make_evaluator=lambda factory: _toy_evaluator)
+
+
+def _fragile_builder(cfg):
+    # build-time failure mode: a poisoned config raises in the builder
+    if cfg["s"] < 0:
+        raise ValueError("poisoned config")
+
+    def fn(x):
+        # trace-time failure mode: the heat3d `assert total % h == 0` analog
+        assert x.shape[0] % cfg["s"] == 0, "indivisible block"
+        return x * cfg["s"]
+
+    return fn
+
+
+register("toy_fragile", builder=_fragile_builder, space=_toy_space)
 
 
 def test_dispatch_exec_cache_hit_miss(tmp_path):
@@ -341,6 +363,236 @@ def test_background_tuner_warm_starts_from_neighbors(tmp_path):
         assert recs[0] is not None and recs[0].config["s"] == 32
     finally:
         tuner.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# hardening: poisoned store records, _fast TTL sweep
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_builder_config_degrades_to_default(tmp_path):
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord("toy_fragile", ((4,),), "host", {"s": -3}, 0.5))
+    svc = DispatchService(store)
+    x = np.arange(4.0)
+    out = svc.call("toy_fragile", x)               # must not raise
+    np.testing.assert_array_equal(np.asarray(out), x * 1)  # default config
+    assert svc.stats["build_failed"] == 1
+    # the offending record is quarantined: not served again, not re-accepted
+    assert store.get("toy_fragile", ((4,),), "host") is None
+    assert not store.put(TuningRecord("toy_fragile", ((4,),), "host", {"s": -3}, 0.1))
+    # and the quarantine is visible to a fresh process view of the store
+    assert not TuningStore(str(tmp_path / "s")).put(
+        TuningRecord("toy_fragile", ((4,),), "host", {"s": -3}, 0.01))
+
+
+def test_poisoned_trace_config_degrades_to_default(tmp_path):
+    # builder succeeds but tracing fails (heat3d's indivisible fuse_t analog)
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord("toy_fragile", ((4,),), "host", {"s": 3}, 0.5))
+    svc = DispatchService(store)
+    x = np.arange(4.0)
+    np.testing.assert_array_equal(np.asarray(svc.call("toy_fragile", x)), x * 1)
+    assert svc.stats["build_failed"] == 1
+    # a good config for the same key is still accepted after the quarantine
+    assert store.put(TuningRecord("toy_fragile", ((4,),), "host", {"s": 2}, 0.4))
+    svc.invalidate("toy_fragile")
+    np.testing.assert_array_equal(np.asarray(svc.call("toy_fragile", x)), x * 2)
+    assert svc.stats["build_failed"] == 1          # no new failure
+
+
+def test_near_miss_build_failure_does_not_quarantine(tmp_path):
+    # a neighbor that fails for THIS shape may be perfectly valid for its
+    # own signature — it must degrade to the default without being banned
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord("toy_fragile", ((6,),), "host", {"s": 3}, 0.5))
+    svc = DispatchService(store)
+    x = np.arange(4.0)                 # nearest ((6,),): 3 doesn't divide 4
+    np.testing.assert_array_equal(np.asarray(svc.call("toy_fragile", x)), x * 1)
+    assert svc.stats["build_failed"] == 1
+    assert store.get("toy_fragile", ((6,),), "host") is not None
+    x6 = np.arange(6.0)                # still serves its own signature
+    np.testing.assert_array_equal(np.asarray(svc.call("toy_fragile", x6)), x6 * 3)
+
+
+def test_quarantine_canonicalizes_on_bucketed_store(tmp_path):
+    store = TuningStore(str(tmp_path / "s"), bucket=True)
+    store.put(_rec(dims=(130, 120), obj=1.0, t=8))
+    store.quarantine(_rec(dims=(130, 120), obj=1.0, t=8))  # raw, unbucketed sig
+    assert store.get("k", ((130, 120),), "host") is None
+    assert not store.put(_rec(dims=(127, 126), obj=0.1, t=8))  # same bucket: banned
+
+
+def test_fast_map_sweeps_expired_entries():
+    svc = DispatchService(resolve_ttl_sec=0.0, fast_sweep_size=4)
+    for i in range(16):  # jittery serving shapes, all instantly stale
+        svc.dispatch("toy_scale", np.arange(float(i + 1)))
+    # without the sweep the TTL map would hold all 16 signatures
+    assert len(svc._fast) <= 5
+
+
+def test_fast_map_expired_entry_replaced_on_hit():
+    svc = DispatchService(resolve_ttl_sec=0.0)
+    x = np.arange(4.0)
+    svc.dispatch("toy_scale", x)
+    assert len(svc._fast) == 1
+    svc.dispatch("toy_scale", x)   # expired on hit: dropped then re-inserted
+    assert len(svc._fast) == 1
+
+
+# ---------------------------------------------------------------------------
+# store bucketing + eviction
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_store_collapses_jittery_shapes(tmp_path):
+    store = TuningStore(str(tmp_path / "s"), bucket=True)
+    assert store.put(_rec(dims=(130, 120), obj=1.0, t=8))
+    assert len(store) == 1
+    # jittery neighbors land on (and resolve from) the same power-of-two key
+    assert store.get("k", ((127, 130),), "host").config == {"t": 8}
+    assert store.get("k", ((128, 128),), "host") is not None
+    assert not store.put(_rec(dims=(126, 125), obj=2.0, t=4))  # same bucket, worse
+    assert len(store) == 1
+
+
+def test_compact_ttl_evicts_stale_records(tmp_path):
+    import dataclasses
+    import time as _time
+
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(dataclasses.replace(_rec(dims=(64, 64), obj=1.0),
+                                  created=_time.time() - 3600))
+    store.put(_rec(dims=(128, 128), obj=1.0))
+    assert store.compact(ttl_sec=60) == 1
+    assert store.get("k", ((64, 64),), "host") is None
+    assert store.get("k", ((128, 128),), "host") is not None
+
+
+def test_compact_per_kernel_budget_keeps_recently_used(tmp_path):
+    store = TuningStore(str(tmp_path / "s"))
+    for d in (32, 64, 128):
+        store.put(_rec(dims=(d, d), obj=1.0))
+    store.put(_rec(kernel="other", dims=(8, 8), obj=1.0))
+    store.get("k", ((64, 64),), "host")            # LRU-touch one key
+    assert store.compact(max_per_kernel=1) == 2    # one per kernel survives
+    assert store.get("k", ((64, 64),), "host") is not None
+    assert store.get("k", ((32, 32),), "host") is None
+    assert store.get("other", ((8, 8),), "host") is not None
+
+
+def test_quarantine_survives_compact(tmp_path):
+    path = str(tmp_path / "s")
+    store = TuningStore(path)
+    bad = _rec(dims=(64, 64), obj=1.0, t=8)
+    store.put(bad)
+    store.quarantine(bad)
+    store.put(_rec(dims=(128, 128), obj=1.0, t=4))
+    assert store.compact() == 1
+    fresh = TuningStore(path)
+    assert fresh.get("k", ((64, 64),), "host") is None
+    assert not fresh.put(_rec(dims=(64, 64), obj=0.1, t=8))  # still banned
+
+
+# ---------------------------------------------------------------------------
+# model-kernel dispatch: flash attention resolves tuned (bq, bk) by signature
+# ---------------------------------------------------------------------------
+
+
+def _ref_attention(q, k, v, causal=True):
+    import jax
+    import jax.numpy as jnp
+
+    s = jnp.einsum("bqh,bsh->bqs", q, k) * (q.shape[-1] ** -0.5)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = np.arange(Sq)[:, None] >= np.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    return jnp.einsum("bqs,bsh->bqh", jax.nn.softmax(s, axis=-1), v)
+
+
+def test_flash_dispatch_resolves_tuned_blocks_by_signature(tmp_path):
+    from repro.kernels.model_kernels import (
+        flash_attention_signature,
+        init_flash_attention,
+    )
+
+    q, k, v = init_flash_attention(2, 32, 32, 8)
+    ref = np.asarray(_ref_attention(q, k, v))
+
+    svc = DispatchService()                        # empty store -> space default
+    out = np.asarray(svc.call("flash_attention", q, k, v, causal=True))
+    assert svc.stats["store_default"] == 1
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord(
+        "flash_attention", flash_attention_signature(2, 32, 32, 8), "host",
+        {"impl": "pallas", "bq": 16, "bk": 16}, 0.5))
+    svc2 = DispatchService(store)
+    out2 = np.asarray(svc2.call("flash_attention", q, k, v, causal=True))
+    assert svc2.stats["store_exact"] == 1          # resolved by signature
+    assert svc2.stats["build_failed"] == 0         # tuned pallas variant ran
+    np.testing.assert_allclose(out2, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_matmul_dispatch_matches_reference(tmp_path):
+    from repro.kernels.model_kernels import init_matmul
+
+    a, b = init_matmul(48, 40, 56)
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord("matmul", (tuple(a.shape), tuple(b.shape)), "host",
+                           {"bm": 16, "bn": 16, "bk": 16, "pack": True}, 0.5))
+    svc = DispatchService(store)
+    out = np.asarray(svc.call("matmul", a, b))
+    assert svc.stats["store_exact"] == 1
+    np.testing.assert_allclose(out, np.asarray(a) @ np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# warm-start accounting fixes
+# ---------------------------------------------------------------------------
+
+
+def test_warm_start_excludes_reevaluated_config_from_priors(tmp_path):
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord("toy_scale", ((8,),), "host", {"s": 32}, 1 / 32))
+    store.put(TuningRecord("toy_scale", ((16,),), "host", {"s": 16}, 1 / 16))
+    store.put(TuningRecord("toy_scale", ((64,),), "host", {"s": 8}, 1 / 8))
+    tuner = BackgroundTuner(store, max_workers=1, warm_neighbors=3)
+    try:
+        cfgs, recs = tuner._warm_start("toy_scale", ((8,),), "host")
+        assert cfgs == [{"s": 32}]                 # nearest, re-evaluated live
+        # the re-evaluated config must NOT also appear as a virtual observation
+        assert {"s": 32} not in [c for c, _ in recs]
+        assert [c for c, _ in recs] == [{"s": 16}, {"s": 8}]
+    finally:
+        tuner.shutdown()
+
+
+def test_warm_start_single_record_yields_no_priors(tmp_path):
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord("toy_scale", ((8,),), "host", {"s": 32}, 1 / 32))
+    tuner = BackgroundTuner(store, max_workers=1)
+    try:
+        cfgs, recs = tuner._warm_start("toy_scale", ((8,),), "host")
+        assert cfgs == [{"s": 32}] and recs is None
+    finally:
+        tuner.shutdown()
+
+
+def test_run_search_warm_start_stops_at_budget():
+    calls = []
+
+    def ev(cfg):
+        calls.append(dict(cfg))
+        return EvalResult(1.0 / cfg["s"], True, {})
+
+    warm = [{"s": s} for s in _TOY_SEQ]            # more configs than budget
+    res = run_search(_toy_space(), ev, max_evals=2, learner="RF",
+                     n_initial=1, warm_start=warm)
+    assert len(calls) == 2 and len(res.db) == 2
 
 
 def test_dispatch_miss_enqueues_background_campaign(tmp_path):

@@ -58,6 +58,72 @@ def test_cache_bytes_accounting():
     assert cache_bytes_per_token(z) == 2 * 32 * 64 * 7 * 2  # 7 shared sites
 
 
+def test_greedy_decode_service_resolves_tuned_flash_record(tmp_path):
+    """The serve-path dispatch contract: a store seeded with a tuned
+    flash-attention record for the prefill shape signature is resolved
+    (store_exact), and the dispatched path reproduces the un-dispatched
+    tokens and logits."""
+    from repro.dispatch import DispatchService, TuningRecord, TuningStore
+    from repro.kernels.model_kernels import flash_attention_signature
+
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(cfg, KEY)
+    B, S = 2, 6
+    prompt = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    base_toks = greedy_decode(params, cfg, prompt, steps=4, max_len=12)
+    base_logits, _ = forward(params, {"tokens": prompt}, cfg)
+
+    store = TuningStore(str(tmp_path / "s"))
+    # the GQA route dispatches per kv-head group: BH = batch * kv heads
+    sig = flash_attention_signature(B * cfg.n_kv_heads, S, S, cfg.hd)
+    assert store.put(TuningRecord("flash_attention", sig, "host",
+                                  {"impl": "xla", "bq": 4, "bk": 4}, 1.0))
+    svc = DispatchService(store)
+    toks = greedy_decode(params, cfg, prompt, steps=4, max_len=12, service=svc)
+    assert svc.stats["store_exact"] >= 1           # resolved by signature
+    assert svc.stats["build_failed"] == 0          # tuned variant actually ran
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(base_toks))
+    svc_logits, _ = forward(params, {"tokens": prompt}, cfg, service=svc)
+    np.testing.assert_allclose(np.asarray(svc_logits), np.asarray(base_logits),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_greedy_decode_service_empty_store_uses_defaults(tmp_path):
+    from repro.dispatch import DispatchService, TuningStore
+
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(cfg, KEY)
+    prompt = jax.random.randint(KEY, (2, 6), 0, cfg.vocab_size)
+    base = greedy_decode(params, cfg, prompt, steps=3, max_len=12)
+    svc = DispatchService(TuningStore(str(tmp_path / "s")))
+    toks = greedy_decode(params, cfg, prompt, steps=3, max_len=12, service=svc)
+    assert svc.stats["store_default"] >= 1
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(base))
+
+
+def test_greedy_decode_service_poisoned_record_degrades(tmp_path):
+    from repro.dispatch import DispatchService, TuningRecord, TuningStore
+    from repro.kernels.model_kernels import flash_attention_signature
+
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(cfg, KEY)
+    B, S = 2, 6
+    prompt = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    base = greedy_decode(params, cfg, prompt, steps=3, max_len=12)
+
+    store = TuningStore(str(tmp_path / "s"))
+    # the GQA route dispatches per kv-head group: BH = batch * kv heads
+    sig = flash_attention_signature(B * cfg.n_kv_heads, S, S, cfg.hd)
+    store.put(TuningRecord("flash_attention", sig, "host",
+                           {"impl": "bogus", "bq": 4, "bk": 4}, 1.0))
+    svc = DispatchService(store)
+    toks = greedy_decode(params, cfg, prompt, steps=3, max_len=12, service=svc)
+    assert svc.stats["build_failed"] >= 1          # degraded, did not raise
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(base))
+    # the poisoned record is quarantined, not re-served
+    assert store.get("flash_attention", sig, "host") is None
+
+
 def test_serve_step_emits_argmax_token():
     cfg = _cfg("mamba2-780m")
     params = init_params(cfg, KEY)
