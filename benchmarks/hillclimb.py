@@ -171,10 +171,15 @@ def run_probe(arch: str, shape: str, out: str, multi_pod: bool = False):
 
 
 def run(arch: str, shape: str, evals: int, out: str, multi_pod: bool = False,
-        learner: str = "RF"):
+        learner: str = "RF", parallel: int = 1, db_path: str | None = None):
+    """Thin adapter over :class:`repro.engine.Campaign`: the campaign owns
+    warm-start, budget, and (with ``db_path``) crash-safe resume; this
+    driver only builds the evaluator and reports the payload. ``parallel``
+    keeps that many lower+compile evaluations in flight (each evaluation
+    holds the GIL only between XLA calls, so compiles overlap well)."""
     import jax
     from repro.configs import SHAPES, get_config
-    from repro.core import autotune
+    from repro.engine import Campaign
     from repro.launch.mesh import make_production_mesh
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -190,8 +195,9 @@ def run(arch: str, shape: str, evals: int, out: str, multi_pod: bool = False,
     base = ev(baseline_cfg)
     baseline = dict(log[-1])
 
-    res = autotune(space, ev, max_evals=evals, learner=learner, seed=1234,
-                   n_initial=max(4, evals // 3), warm_start=[baseline_cfg])
+    res = Campaign(space, ev, max_evals=evals, learner=learner, seed=1234,
+                   n_initial=max(4, evals // 3), parallel=parallel,
+                   db_path=db_path, warm_start=[baseline_cfg]).run()
     best = res.best
     payload = {
         "arch": arch, "shape": shape,
@@ -219,6 +225,10 @@ def main():
     ap.add_argument("--evals", type=int, default=12)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--learner", default="RF")
+    ap.add_argument("--parallel", type=int, default=1,
+                    help="lower+compile evaluations in flight (1 = serial)")
+    ap.add_argument("--db", default=None,
+                    help="campaign checkpoint dir (resume a killed hillclimb)")
     ap.add_argument("--probe", action="store_true",
                     help="hypothesis-ladder mode: one compile per probe")
     ap.add_argument("--out", default=None)
@@ -227,7 +237,8 @@ def main():
     if args.probe:
         run_probe(args.arch, args.shape, out, args.multi_pod)
     else:
-        run(args.arch, args.shape, args.evals, out, args.multi_pod, args.learner)
+        run(args.arch, args.shape, args.evals, out, args.multi_pod,
+            args.learner, parallel=args.parallel, db_path=args.db)
 
 
 if __name__ == "__main__":

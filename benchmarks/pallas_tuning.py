@@ -7,83 +7,54 @@ the reduced-size check is a full proxy.
 Rows report modeled microseconds on TPU v5e for (default MXU tiles) vs
 (autotuned), plus the modeled roofline utilization of the tuned schedule.
 
-Campaign results route through ``repro.dispatch``: pass a
-:class:`~repro.dispatch.TuningStore` (or a path) to :func:`tune_all` and each
-kernel's campaign (a) warm-starts from the store's nearest tuned record and
-(b) publishes its winner back, so successive benchmark runs converge in a
-fraction of the evaluation budget and serving picks the configs up for free.
+Shape tables live in :mod:`repro.kernels.problems` (shared with the autotune
+CLI and the cost-backend background tuner). Campaign results route through
+``repro.dispatch``: pass a :class:`~repro.dispatch.TuningStore` (or a path)
+to :func:`tune_all` and each kernel's campaign (a) warm-starts from the
+store's nearest tuned records and (b) publishes its winner back, so
+successive benchmark runs converge in a fraction of the evaluation budget
+and serving picks the configs up for free.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import EVALS
-from repro.core import EvalResult, autotune
-from repro.dispatch import TuningRecord, TuningStore, resolve
+from repro.core import autotune
+from repro.dispatch import TuningRecord, TuningStore
+from repro.dispatch.lookup import warm_start_material
 from repro.kernels.cost import kernel_cost
+from repro.kernels.problems import (
+    DEFAULTS_TPU,
+    LARGE_SHAPES,
+    make_cost_evaluator,
+    problem_signature_for,
+)
 from repro.kernels.spaces import kernel_space
 from repro.perf.roofline import HW
 
-# the paper's LARGE dataset sizes per kernel; the model kernels (serving hot
-# path) use a 16-head 4k-context serving shape as their "LARGE" analog
-LARGE_SHAPES = {
-    "syr2k": (1200, 1000),
-    "mm3": (800, 900, 1000, 1100, 1200),
-    "lu": (2000,),
-    "heat3d": (120, 500),
-    "covariance": (1400, 1200),
-    "floyd_warshall": (2800,),
-    "flash_attention": (16, 4096, 4096, 128),
-    "matmul": (2000, 2300, 2600),
-}
-
-DEFAULTS_TPU = {
-    "syr2k": dict(bi=128, bj=128, bk=128),
-    "mm3": dict(bm=128, bn=128, bk=128),
-    "lu": dict(bs=32, bm=128, bn=128),
-    "heat3d": dict(bi=8, fuse_t=1),
-    "covariance": dict(bi=128, bj=128, bk=256),
-    "floyd_warshall": dict(bs=64, bi=128, bj=128, unroll=1),
-    "flash_attention": dict(impl="pallas", bq=128, bk=128),
-    "matmul": dict(bm=128, bn=128, bk=128, pack=True),
-}
-
-
-def make_evaluator(name: str):
-    shape = LARGE_SHAPES[name]
-
-    def ev(cfg) -> EvalResult:
-        t, info = kernel_cost(name, cfg, *shape)
-        if not np.isfinite(t):
-            return EvalResult(1e9, False, info)
-        return EvalResult(t, True, info)
-
-    return ev
+# back-compat alias: this module's historical evaluator-factory name
+make_evaluator = make_cost_evaluator
 
 
 def _signature(name: str):
-    # per-argument scheme shared with repro.dispatch (see kernels.ref)
-    from repro.kernels.ref import problem_signature
-    return problem_signature(name, *LARGE_SHAPES[name])
+    return problem_signature_for(name, backend="cost")
 
 
-def tune_all(max_evals: int | None = None, store: TuningStore | str | None = None):
+def tune_all(max_evals: int | None = None, store: TuningStore | str | None = None,
+             parallel: int = 1):
     if isinstance(store, str):
         store = TuningStore(store)
     rows = []
     for name in LARGE_SHAPES:
-        ev = make_evaluator(name)
+        ev = make_cost_evaluator(name)
         base_t, base_info = kernel_cost(name, DEFAULTS_TPU[name], *LARGE_SHAPES[name])
         warm_cfgs, warm_recs = None, None
         if store is not None:
-            r = resolve(store, name, _signature(name), backend="cost")
-            if r is not None:
-                warm_cfgs = [dict(r.config)]
-                warm_recs = [(dict(r.config), r.record.objective)]
+            warm_cfgs, warm_recs = warm_start_material(
+                store, name, _signature(name), backend="cost")
         res = autotune(kernel_space(name, target="tpu"), ev,
                        max_evals=max_evals or max(EVALS, 40), learner="RF",
-                       seed=1234, warm_start=warm_cfgs,
+                       seed=1234, parallel=parallel, warm_start=warm_cfgs,
                        warm_start_records=warm_recs)
         b = res.best
         if store is not None and b is not None:

@@ -25,7 +25,7 @@ from repro.core import acquisition as acq_mod
 from repro.core import surrogates
 from repro.core.database import FAILED, OK, SKIPPED_DUPLICATE, PerformanceDatabase, Record
 from repro.core.plopper import EvalResult
-from repro.core.space import ConfigurationSpace
+from repro.core.space import ConfigurationSpace, config_key
 
 __all__ = ["SearchResult", "BayesianSearch", "run_search"]
 
@@ -51,7 +51,18 @@ class SearchResult:
 
 
 class BayesianSearch:
-    """ask/tell Bayesian optimizer over a :class:`ConfigurationSpace`."""
+    """ask/tell Bayesian optimizer over a :class:`ConfigurationSpace`.
+
+    Supports batched proposals: ``ask(n)`` returns ``n`` distinct candidates
+    using a constant-liar fill-in — each proposal is registered as a
+    *pending* evaluation whose objective is lied to be the mean of the
+    observed values, so refitting the surrogate between in-batch proposals
+    steers later candidates away from (already-claimed) regions, the qLCB
+    batch strategy. ``tell``/``tell_skipped`` clear the pending entry. With
+    an empty pending set, ``ask()`` is bit-for-bit the serial single-point
+    proposal loop, which is how ``q=1`` campaigns reproduce legacy serial
+    trajectories exactly.
+    """
 
     def __init__(
         self,
@@ -77,6 +88,10 @@ class BayesianSearch:
         self.db = db if db is not None else PerformanceDatabase()
         self._init_queue: list[dict] = []
         self._model = None
+        # configs proposed but not yet told: config_key -> config. They act
+        # as constant-liar observations in _training_data and are excluded
+        # from re-proposal, enabling n candidates in flight at once.
+        self._pending: dict[tuple, dict] = {}
         # warm start: (config, objective) pairs from a prior campaign (e.g. a
         # TuningStore nearest neighbor) become virtual observations — they seed
         # the surrogate without consuming evaluation budget, and each prior
@@ -113,12 +128,15 @@ class BayesianSearch:
 
     def _training_data(self):
         """All recorded evaluations; failures are clipped to a soft penalty so
-        the surrogate learns to avoid the region without its scale exploding."""
+        the surrogate learns to avoid the region without its scale exploding.
+        Pending (in-flight) configs are appended as constant-liar rows whose
+        objective is the mean of the real observations, so a batch's later
+        proposals see its earlier ones as already claimed."""
         recs = [r for r in self.db.records if r.status in (OK, FAILED)]
         if not recs:
             if self._prior_X is not None:
-                return self._prior_X, self._prior_y
-            return None, None
+                return self._liar_augment(self._prior_X, self._prior_y)
+            return (None, None) if not self._pending else self._liar_augment(None, None)
         ok_vals = [r.objective for r in recs if r.status == OK]
         cap = (max(ok_vals) * 2.0 + 1e-9) if ok_vals else 1.0
         X = self.space.encode_many([r.config for r in recs])
@@ -126,7 +144,42 @@ class BayesianSearch:
         if self._prior_X is not None:
             X = np.concatenate([X, self._prior_X])
             y = np.concatenate([y, self._prior_y])
-        return X, y
+        return self._liar_augment(X, y)
+
+    def _liar_augment(self, X, y):
+        """Append one (encoded config, lied objective) row per pending eval.
+        No-op — returning X, y untouched — when nothing is pending, which is
+        what keeps ``q=1`` campaigns identical to the legacy serial loop."""
+        if not self._pending:
+            return X, y
+        Xp = self.space.encode_many(list(self._pending.values()))
+        lie = float(np.mean(y)) if y is not None and len(y) else 0.0
+        yp = np.full(len(Xp), lie)
+        if X is None:
+            return Xp, yp
+        return np.concatenate([X, Xp]), np.concatenate([y, yp])
+
+    # -- pending (in-flight) bookkeeping ---------------------------------------
+
+    def mark_pending(self, config: Mapping[str, Any]) -> None:
+        """Register an in-flight evaluation (no-op for configs already in the
+        DB — a real observation beats a lie)."""
+        key = config_key(config)
+        if key not in self._pending and not self.db.contains(config):
+            self._pending[key] = dict(config)
+
+    def clear_pending(self, config: Mapping[str, Any]) -> None:
+        self._pending.pop(config_key(config), None)
+
+    def is_pending(self, config: Mapping[str, Any]) -> bool:
+        return config_key(config) in self._pending
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def _is_fresh(self, config: Mapping[str, Any]) -> bool:
+        return not self.db.contains(config) and not self.is_pending(config)
 
     def _candidate_pool(self) -> list[dict]:
         pool = self.space.sample_configurations(self.n_candidates, self.rng)
@@ -135,14 +188,29 @@ class BayesianSearch:
             pool += [self.space.mutate(best.config, self.rng) for _ in range(self.n_candidates // 8)]
         return pool
 
-    def ask(self) -> dict:
-        # 1) initialization phase
-        if len(self.db) < self.n_initial:
+    def ask(self, n: int | None = None) -> dict | list[dict]:
+        """Propose the next candidate(s). ``ask()`` returns a single config
+        (legacy serial API, no pending registration). ``ask(n)`` returns a
+        list of ``n`` configs, each registered pending with a constant-liar
+        observation so they can be evaluated concurrently; callers must
+        ``tell``/``tell_skipped`` each one to release its pending slot."""
+        if n is None:
+            return self._ask_one()
+        batch = []
+        for _ in range(n):
+            cfg = self._ask_one()
+            self.mark_pending(cfg)
+            batch.append(cfg)
+        return batch
+
+    def _ask_one(self) -> dict:
+        # 1) initialization phase (pending evals count toward the quota)
+        if len(self.db) + self.n_pending < self.n_initial:
             if not self._init_queue:
                 self._init_queue = self._initial_batch()
             while self._init_queue:
                 cfg = self._init_queue.pop(0)
-                if not self.dedups_against_db or not self.db.contains(cfg):
+                if not self.dedups_against_db or self._is_fresh(cfg):
                     return cfg
             return self.space.sample_configuration(self.rng)
 
@@ -164,7 +232,7 @@ class BayesianSearch:
 
         if self.dedups_against_db:
             for i in order:
-                if not self.db.contains(pool[int(i)]):
+                if self._is_fresh(pool[int(i)]):
                     return pool[int(i)]
             return self.space.sample_configuration(self.rng)  # pool exhausted
         # GP path: return the argmin even if it repeats a previous evaluation
@@ -173,10 +241,12 @@ class BayesianSearch:
     # -- tell ------------------------------------------------------------------
 
     def tell(self, config: Mapping[str, Any], result: EvalResult) -> Record:
+        self.clear_pending(config)
         status = OK if result.ok else FAILED
         return self.db.add(config, result.objective, status=status, info=result.info)
 
     def tell_skipped(self, config: Mapping[str, Any]) -> Record:
+        self.clear_pending(config)
         prior = self.db.lookup(config)
         obj = prior.objective if prior else float("nan")
         return self.db.add(config, obj, status=SKIPPED_DUPLICATE,
@@ -197,51 +267,26 @@ def run_search(
     callback: Callable[[Record], None] | None = None,
     warm_start: list | None = None,
     warm_start_records: list[tuple[Mapping[str, Any], float]] | None = None,
+    parallel: int = 1,
+    executor=None,
 ) -> SearchResult:
-    """Run a full campaign (Sec. 2.3 steps 4-8). Resumable: if ``db_path``
-    already holds records, the campaign continues from them. ``warm_start``
-    configs (e.g. the known default schedule, or a TuningStore best) are
-    evaluated first so the surrogate — and the final best — always include
-    them. ``warm_start_records`` are already-measured (config, objective)
-    pairs from prior campaigns: they seed the surrogate as virtual
-    observations and shrink the random-initialization phase, so a
-    warm-started campaign converges in far fewer evaluations."""
-    db = PerformanceDatabase(db_path, param_names=space.param_names)
-    search = BayesianSearch(
-        space, learner=learner, kappa=kappa, acq=acq, n_initial=n_initial,
-        init_method=init_method, seed=seed, db=db,
-        prior_records=warm_start_records,
-    )
-    n_skipped = sum(1 for r in db.records if r.status == SKIPPED_DUPLICATE)
-    n_failed = sum(1 for r in db.records if r.status == FAILED)
+    """Run a full campaign (Sec. 2.3 steps 4-8) — a thin adapter over
+    :class:`repro.engine.Campaign`. Resumable: if ``db_path`` already holds
+    records, the campaign continues from them. ``warm_start`` configs (e.g.
+    the known default schedule, or a TuningStore best) are evaluated first so
+    the surrogate — and the final best — always include them.
+    ``warm_start_records`` are already-measured (config, objective) pairs
+    from prior campaigns: they seed the surrogate as virtual observations and
+    shrink the random-initialization phase, so a warm-started campaign
+    converges in far fewer evaluations. ``parallel`` > 1 evaluates that many
+    candidates concurrently (constant-liar batching, thread-pool executor);
+    ``parallel=1`` reproduces the legacy serial trajectory bit-for-bit."""
+    from repro.engine import Campaign  # deferred: engine builds on this module
 
-    for cfg in warm_start or []:
-        if len(db) >= max_evals:
-            break  # budget exhausted: later warm configs can't be evaluated either
-        if db.contains(cfg):
-            continue
-        result = evaluator(cfg)
-        rec = search.tell(cfg, result)
-        if not result.ok:
-            n_failed += 1
-        if callback:
-            callback(rec)
-
-    while len(db) < max_evals:
-        config = search.ask()
-        if not search.dedups_against_db and db.contains(config):
-            rec = search.tell_skipped(config)  # GP: duplicate consumes budget
-            n_skipped += 1
-        else:
-            result = evaluator(config)
-            rec = search.tell(config, result)
-            if not result.ok:
-                n_failed += 1
-        if callback:
-            callback(rec)
-
-    return SearchResult(
-        db=db, best=db.best(),
-        n_evaluated=sum(1 for r in db.records if r.status == OK),
-        n_skipped=n_skipped, n_failed=n_failed, learner=learner.upper(),
-    )
+    return Campaign(
+        space, evaluator, max_evals=max_evals, learner=learner, seed=seed,
+        db_path=db_path, n_initial=n_initial, init_method=init_method,
+        kappa=kappa, acq=acq, callback=callback, warm_start=warm_start,
+        warm_start_records=warm_start_records, parallel=parallel,
+        executor=executor,
+    ).run()

@@ -1,7 +1,8 @@
 """High-level autotuning API: the framework's user-facing entry point.
 
 ``autotune()`` wires a ConfigurationSpace + evaluator + learner into a full
-campaign (the paper's --max-evals / --learner CLI options map 1:1), and
+:class:`repro.engine.Campaign` (the paper's --max-evals / --learner CLI
+options map 1:1, plus ``parallel`` for batched concurrent evaluation), and
 ``compare_learners()`` runs the paper's four-learner study.
 """
 
@@ -24,13 +25,17 @@ def autotune(
     learner: str = "RF",
     seed: int = 1234,
     db_path: str | None = None,
+    parallel: int = 1,
     **kw,
 ) -> SearchResult:
     """Run one autotuning campaign. ``learner`` in {RF, ET, GBRT, GP} (paper
-    default: RF); ``max_evals`` is the paper's -max-evals (default 100)."""
+    default: RF); ``max_evals`` is the paper's -max-evals (default 100).
+    ``parallel`` > 1 keeps that many evaluations in flight (constant-liar
+    batching over a thread pool; the evaluator must be thread-safe);
+    ``parallel=1`` is the paper's serial loop, bit-for-bit."""
     return run_search(
         space, evaluator, max_evals=max_evals, learner=learner, seed=seed,
-        db_path=db_path, **kw,
+        db_path=db_path, parallel=parallel, **kw,
     )
 
 

@@ -1,13 +1,17 @@
 """Background tuning: async BO campaigns feeding the store.
 
 A dispatch-time cache miss (or a too-distant / stale resolution) enqueues a
-campaign on a small thread worker pool. Each campaign reuses the exact
-offline machinery — :func:`repro.core.search.run_search` — but warm-started
-from the store's nearest-neighbor records, so an online campaign typically
-needs a fraction of the offline 200-evaluation budget. The winning config is
-published back to the :class:`TuningStore` (an atomic best-only append, i.e.
-the hot swap) and an ``on_done`` callback lets the dispatch service
-invalidate its compiled-executable cache for the affected signature.
+campaign on a small thread worker pool. Each campaign is a
+:class:`repro.engine.Campaign` — the exact offline machinery — warm-started
+from the store's nearest-neighbor records
+(:func:`repro.dispatch.lookup.warm_start_material`), so an online campaign
+typically needs a fraction of the offline 200-evaluation budget. With
+``parallel > 1`` each campaign additionally keeps that many candidate
+evaluations in flight (constant-liar batching), saturating idle cores. The
+winning config is published back to the :class:`TuningStore` (an atomic
+best-only append, i.e. the hot swap) and an ``on_done`` callback lets the
+dispatch service invalidate its compiled-executable cache for the affected
+signature.
 
 In-flight deduplication is by ``(kernel, signature, backend)``: a hot
 serving path that misses a thousand times enqueues one campaign, not a
@@ -18,12 +22,13 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import threading
+import time
 from typing import Any, Callable
 
-from repro.core.search import run_search
-from repro.core.space import config_key
-from repro.dispatch.signature import ShapeSignature, signature_distance, signature_key
+from repro.dispatch.lookup import warm_start_material
+from repro.dispatch.signature import ShapeSignature, signature_key
 from repro.dispatch.store import TuningRecord, TuningStore
+from repro.engine import Campaign
 
 __all__ = ["BackgroundTuner"]
 
@@ -39,6 +44,7 @@ class BackgroundTuner:
         seed: int = 1234,
         n_initial: int = 4,
         warm_neighbors: int = 3,
+        parallel: int = 1,
     ):
         self.store = store
         self.max_evals = max_evals
@@ -46,6 +52,7 @@ class BackgroundTuner:
         self.seed = seed
         self.n_initial = n_initial
         self.warm_neighbors = warm_neighbors
+        self.parallel = parallel
         self._pool = cf.ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="repro-bg-tune")
         self._inflight: set[tuple] = set()
@@ -73,42 +80,32 @@ class BackgroundTuner:
             if key in self._inflight:
                 return None
             self._inflight.add(key)
-        fut = self._pool.submit(
-            self._campaign, key, kernel, signature, backend, space, evaluator,
-            max_evals or self.max_evals, on_done)
+        try:
+            fut = self._pool.submit(
+                self._campaign, key, kernel, signature, backend, space, evaluator,
+                max_evals or self.max_evals, on_done)
+        except RuntimeError:  # pool shut down: serving degrades, never crashes
+            with self._lock:
+                self._inflight.discard(key)
+            return None
         with self._lock:
             self._futures.append(fut)
         return fut
 
     def _warm_start(self, kernel: str, signature: ShapeSignature, backend: str):
-        """Nearest store records become warm-start material: the single
-        closest config is re-evaluated first, and up to ``warm_neighbors``
-        further neighbors seed the surrogate as virtual observations. The
-        re-evaluated config is excluded from the virtual observations —
-        otherwise its real evaluation plus the prior row would double-count
-        that config in the surrogate's training data."""
-        ranked = sorted(
-            self.store.records(kernel=kernel, backend=backend),
-            key=lambda r: signature_distance(signature, r.signature))
-        ranked = [r for r in ranked
-                  if signature_distance(signature, r.signature) != float("inf")]
-        if not ranked:
-            return None, None
-        configs = [dict(ranked[0].config)]
-        first = config_key(ranked[0].config)
-        records = [(dict(r.config), float(r.objective))
-                   for r in ranked[1 : self.warm_neighbors + 1]
-                   if config_key(r.config) != first]
-        return configs, records or None
+        """Nearest store records become warm-start material (see
+        :func:`repro.dispatch.lookup.warm_start_material`)."""
+        return warm_start_material(
+            self.store, kernel, signature, backend, neighbors=self.warm_neighbors)
 
     def _campaign(self, key, kernel, signature, backend, space, evaluator,
                   max_evals, on_done) -> TuningRecord | None:
         try:
             warm_cfgs, warm_recs = self._warm_start(kernel, signature, backend)
-            result = run_search(
+            result = Campaign(
                 space, evaluator, max_evals=max_evals, learner=self.learner,
-                seed=self.seed, n_initial=self.n_initial,
-                warm_start=warm_cfgs, warm_start_records=warm_recs)
+                seed=self.seed, n_initial=self.n_initial, parallel=self.parallel,
+                warm_start=warm_cfgs, warm_start_records=warm_recs).run()
             if result.best is None:
                 return None
             rec = TuningRecord(
@@ -133,10 +130,26 @@ class BackgroundTuner:
     def drain(self, timeout: float | None = None) -> list[TuningRecord | None]:
         """Block until every submitted campaign finishes; returns their
         published records (None for no-improvement or failed campaigns —
-        failures are collected in ``self.errors``, not raised)."""
+        failures are collected in ``self.errors``, not raised). ``timeout``
+        is one deadline shared across all futures — total wait is bounded by
+        ``timeout`` seconds, not ``n_futures x timeout``."""
         with self._lock:
             futs = list(self._futures)
-        return [f.result(timeout=timeout) for f in futs]
+        deadline = None if timeout is None else time.monotonic() + timeout
+        out = []
+        for f in futs:
+            remaining = None if deadline is None else deadline - time.monotonic()
+            if remaining is not None and remaining <= 0:
+                raise TimeoutError(
+                    f"drain deadline ({timeout}s) exceeded with "
+                    f"{len(futs) - len(out)} campaign(s) unfinished")
+            try:
+                out.append(f.result(timeout=remaining))
+            except cf.TimeoutError:  # normalize (distinct class before 3.11)
+                raise TimeoutError(
+                    f"drain deadline ({timeout}s) exceeded with "
+                    f"{len(futs) - len(out)} campaign(s) unfinished") from None
+        return out
 
     def shutdown(self, wait: bool = True) -> None:
         self._pool.shutdown(wait=wait)

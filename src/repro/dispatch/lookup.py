@@ -15,7 +15,7 @@ import dataclasses
 from repro.dispatch.signature import ShapeSignature, signature_distance
 from repro.dispatch.store import TuningRecord, TuningStore
 
-__all__ = ["Resolution", "resolve"]
+__all__ = ["Resolution", "resolve", "warm_start_material"]
 
 
 @dataclasses.dataclass
@@ -51,3 +51,40 @@ def resolve(
     if max_distance is not None and best_d > max_distance:
         return None
     return Resolution(best, best_d, False)
+
+
+def warm_start_material(
+    store: TuningStore,
+    kernel: str,
+    signature: ShapeSignature,
+    backend: str,
+    neighbors: int = 3,
+) -> tuple[list[dict] | None, list[tuple[dict, float]] | None]:
+    """Warm-start material for a campaign targeting ``signature``, derived
+    from the store's nearest records: ``(configs, records)`` where
+    ``configs`` is the single closest config (to re-evaluate first, so the
+    campaign's best can never regress below the stored optimum) and
+    ``records`` are up to ``neighbors`` further (config, objective) pairs
+    that seed the surrogate as virtual observations. The re-evaluated config
+    is excluded from the virtual observations — its real evaluation plus the
+    prior row would double-count it in the surrogate's training data.
+    Returns ``(None, None)`` when the store has no compatible record.
+
+    This is the one warm-start policy shared by the background tuner, the
+    autotune CLI, and the pallas-tuning benchmark (previously three
+    divergent copies)."""
+    from repro.core.space import config_key
+    from repro.dispatch.signature import signature_distance as _dist
+
+    ranked = sorted(
+        store.records(kernel=kernel, backend=backend),
+        key=lambda r: _dist(signature, r.signature))
+    ranked = [r for r in ranked if _dist(signature, r.signature) != float("inf")]
+    if not ranked:
+        return None, None
+    configs = [dict(ranked[0].config)]
+    first = config_key(ranked[0].config)
+    records = [(dict(r.config), float(r.objective))
+               for r in ranked[1 : neighbors + 1]
+               if config_key(r.config) != first]
+    return configs, records or None

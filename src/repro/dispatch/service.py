@@ -31,8 +31,8 @@ from typing import Any, Callable
 
 import jax
 
-from repro.core.plopper import TimingEvaluator
 from repro.core.space import config_key
+from repro.engine.executors import evaluator_for_spec
 from repro.dispatch.lookup import Resolution, resolve
 from repro.dispatch.registry import get as get_variant
 from repro.dispatch.signature import shape_signature, signature_key
@@ -70,8 +70,14 @@ class DispatchService:
         self.stats = {
             "store_exact": 0, "store_near": 0, "store_default": 0,
             "exec_hit": 0, "exec_miss": 0, "bg_enqueued": 0, "build_failed": 0,
+            "serve_rebuilt": 0,
         }
         self._exec: dict[tuple, Callable] = {}
+        # jit_cached sources + stable per-name proxies: invalidate() drops the
+        # compiled entry, and the proxy (which callers hold) lazily re-jits
+        # from the source — the cross-service serve-step hot swap
+        self._fn_src: dict[tuple, Callable] = {}
+        self._fn_proxy: dict[tuple, Callable] = {}
         self._lock = threading.RLock()
 
     # -- config resolution -------------------------------------------------------
@@ -175,11 +181,9 @@ class DispatchService:
         def factory(cfg):
             return spec.builder(cfg, **static_kw), args
 
-        if spec.make_evaluator is not None:
-            evaluator = spec.make_evaluator(factory)
-        else:
-            evaluator = TimingEvaluator(
-                factory, repeats=spec.eval_repeats, warmup=spec.eval_warmup)
+        # make_evaluator override (e.g. the roofline cost backend registered
+        # by repro.kernels.problems.register_cost_backend) else wall-clock
+        evaluator = evaluator_for_spec(spec, factory)
         fut = self.tuner.submit(
             kernel, sig, self.backend, space=spec.space(self.target),
             evaluator=evaluator, on_done=self._on_tuned)
@@ -204,11 +208,19 @@ class DispatchService:
     def invalidate(self, kernel: str | None = None, signature=None) -> int:
         """Drop executable-cache entries (all, per kernel, or per kernel+sig)
         so the next dispatch re-resolves — the hot-swap half of background
-        tuning. Returns the number of entries dropped."""
+        tuning. Returns the number of kernel entries dropped.
+
+        ``jit_cached`` serve steps are invalidated alongside: a jitted serve
+        step bakes in whatever kernel executables were dispatched at trace
+        time, so a config hot swap must also force those steps to re-trace.
+        Their compiled entries are dropped (any entry could close over the
+        affected kernel) and lazily rebuilt from source on next call through
+        the stable proxy callers hold."""
         sig_key = signature_key(signature) if signature is not None else None
 
         def matches(k):
-            return (kernel is None or k[0] == kernel) and \
+            return k[0] != "__fn__" and \
+                   (kernel is None or k[0] == kernel) and \
                    (sig_key is None or k[1] == sig_key)
 
         with self._lock:
@@ -217,6 +229,9 @@ class DispatchService:
                 del self._exec[k]
             for k in [k for k in self._fast if matches(k)]:
                 del self._fast[k]
+            if doomed or kernel is None:
+                for k in list(self._fn_src):
+                    self._exec.pop(k, None)
             return len(doomed)
 
     # -- generic executable cache (serving integration) --------------------------
@@ -225,17 +240,51 @@ class DispatchService:
         """Cache-and-jit an arbitrary callable under a stable name, sharing
         the service's executable cache and hit/miss counters. Used by the
         serving step so repeated ``make_serve_step`` calls for the same model
-        reuse one compiled entry point."""
+        reuse one compiled entry point.
+
+        Returns a stable proxy, not the jitted function itself: when
+        :meth:`invalidate` drops the compiled entry (a kernel config hot
+        swap), every held reference transparently re-traces against the new
+        configs on its next call instead of serving stale executables."""
         key = ("__fn__", name, (), ())
         with self._lock:
+            self._fn_src.setdefault(key, fn)
             cached = self._exec.get(key)
             if cached is not None:
                 self.stats["exec_hit"] += 1
-                return cached
-            self.stats["exec_miss"] += 1
-        jitted = jax.jit(fn) if self.jit else fn
+            else:
+                self.stats["exec_miss"] += 1
+        if cached is None:
+            jitted = jax.jit(fn) if self.jit else fn
+            with self._lock:
+                self._exec.setdefault(key, jitted)
         with self._lock:
-            return self._exec.setdefault(key, jitted)
+            proxy = self._fn_proxy.get(key)
+            if proxy is None:
+                proxy = self._fn_proxy[key] = self._make_fn_proxy(key)
+        return proxy
+
+    def _make_fn_proxy(self, key: tuple) -> Callable:
+        def proxy(*args, **kw):
+            with self._lock:
+                fn = self._exec.get(key)
+            if fn is None:  # invalidated: rebuild from source
+                with self._lock:
+                    src = self._fn_src[key]
+                    self.stats["serve_rebuilt"] += 1
+                # jit caches traces by function identity, so re-jitting `src`
+                # directly would replay the stale executable; a fresh wrapper
+                # object forces a re-trace, baking in freshly-dispatched
+                # kernel configs
+                def fresh(*a, **k):
+                    return src(*a, **k)
+
+                fn = jax.jit(fresh) if self.jit else fresh
+                with self._lock:
+                    fn = self._exec.setdefault(key, fn)
+            return fn(*args, **kw)
+
+        return proxy
 
 
 # -- module-level default service (the one-liner API) ---------------------------

@@ -1,0 +1,205 @@
+"""Campaign: the single ask/evaluate/tell loop behind the whole tuning stack.
+
+Semantics (all inherited from the paper's loop, generalized to ``q`` in
+flight):
+
+  * **budget** — ``max_evals`` counts database records: real evaluations,
+    failures, and GP duplicate-skips all consume budget, exactly as in the
+    serial loop (the paper's "GP finishes only 66 of 200" asymmetry).
+  * **batching** — proposals come from ``BayesianSearch.ask(n)``; each
+    in-flight config is a constant-liar observation, so concurrent
+    candidates diversify instead of piling onto one optimum. With
+    ``parallel=1`` (the :class:`~repro.engine.executors.InlineExecutor`)
+    the ask → evaluate → tell interleaving is byte-identical to the legacy
+    serial loop, so fixed-seed trajectories are preserved.
+  * **learner asymmetry** — RF/ET/GBRT never re-propose a config that is
+    recorded *or* in flight; GP proposals that duplicate a recorded or
+    in-flight config are told as skipped (budget consumed, nothing run).
+  * **crash safety** — every ``tell`` appends one JSONL line via
+    :class:`~repro.core.database.PerformanceDatabase`; a campaign killed
+    after ``k`` records resumes from the same ``db_path`` and performs
+    exactly ``max_evals - k`` further proposals, never re-evaluating a
+    completed config.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+from typing import Any, Callable, Mapping
+
+from repro.core.database import FAILED, OK, SKIPPED_DUPLICATE, PerformanceDatabase, Record
+from repro.core.plopper import EvalResult
+from repro.core.search import BayesianSearch, SearchResult
+from repro.core.space import ConfigurationSpace, config_key
+from repro.engine.executors import Executor, make_executor
+
+__all__ = ["Campaign"]
+
+
+class Campaign:
+    """One autotuning campaign: space + evaluator (or executor) + budget.
+
+    ``evaluator`` is any ``config -> EvalResult`` callable; ``parallel`` picks
+    the executor width (1 = inline/serial). Alternatively pass a ready-made
+    ``executor`` (anything satisfying :class:`~repro.engine.executors.Executor`)
+    — then ``evaluator``/``parallel`` are ignored and the campaign does not
+    shut the executor down when it finishes.
+    """
+
+    def __init__(
+        self,
+        space: ConfigurationSpace,
+        evaluator: Callable[[Mapping[str, Any]], EvalResult] | None = None,
+        *,
+        executor: Executor | None = None,
+        max_evals: int = 100,
+        learner: str = "RF",
+        seed: int = 1234,
+        db: PerformanceDatabase | None = None,
+        db_path: str | None = None,
+        n_initial: int = 10,
+        init_method: str = "lhs",
+        kappa: float = 1.96,
+        acq: str = "LCB",
+        parallel: int = 1,
+        warm_start: list | None = None,
+        warm_start_records: list[tuple[Mapping[str, Any], float]] | None = None,
+        callback: Callable[[Record], None] | None = None,
+    ):
+        if executor is None and evaluator is None:
+            raise ValueError("Campaign needs an evaluator or an executor")
+        self._owns_executor = executor is None
+        self.executor = executor if executor is not None else make_executor(evaluator, parallel)
+        self.max_evals = max_evals
+        self.learner = learner.upper()
+        self.warm_start = list(warm_start or [])
+        self.callback = callback
+        self.db = db if db is not None else PerformanceDatabase(
+            db_path, param_names=space.param_names)
+        self.search = BayesianSearch(
+            space, learner=learner, kappa=kappa, acq=acq, n_initial=n_initial,
+            init_method=init_method, seed=seed, db=self.db,
+            prior_records=warm_start_records,
+        )
+
+    # -- introspection -----------------------------------------------------------
+
+    @property
+    def q(self) -> int:
+        """Max candidates in flight (the executor's width)."""
+        return max(1, getattr(self.executor, "max_inflight", 1))
+
+    @property
+    def remaining(self) -> int:
+        """Budget left: proposals this campaign will still make (the resume
+        contract — a campaign killed after ``k`` records reports and performs
+        exactly ``max_evals - k`` more)."""
+        return max(0, self.max_evals - len(self.db))
+
+    # -- the loop ----------------------------------------------------------------
+
+    def run(self) -> SearchResult:
+        try:
+            self._run_warm_start()
+            self._run_main_loop()
+        finally:
+            if self._owns_executor:
+                self.executor.shutdown(wait=True)
+        return self.result()
+
+    def _tell(self, config: Mapping[str, Any], result: EvalResult) -> None:
+        rec = self.search.tell(config, result)
+        if self.callback:
+            self.callback(rec)
+
+    def _tell_skipped(self, config: Mapping[str, Any]) -> None:
+        rec = self.search.tell_skipped(config)
+        if self.callback:
+            self.callback(rec)
+
+    def _run_warm_start(self) -> None:
+        """Evaluate warm-start configs first (known defaults, store bests) so
+        the surrogate — and the final best — always include them. Results are
+        told in submission order, keeping record indices deterministic at any
+        executor width."""
+        inflight: list[tuple[cf.Future, dict]] = []
+        try:
+            for cfg in self.warm_start:
+                if len(self.db) + len(inflight) >= self.max_evals:
+                    break  # budget exhausted: later warm configs can't run either
+                if self.db.contains(cfg) or self.search.is_pending(cfg):
+                    continue
+                self.search.mark_pending(cfg)
+                inflight.append((self.executor.submit(cfg), cfg))
+            for fut, cfg in inflight:
+                self._tell(cfg, fut.result())
+        except BaseException:
+            # a failing warm eval abandons its siblings; release their pending
+            # slots so a caller that catches and re-runs isn't poisoned
+            for _, cfg in inflight:
+                self.search.clear_pending(cfg)
+            raise
+
+    def _run_main_loop(self) -> None:
+        inflight: dict[cf.Future, dict] = {}
+        keys_inflight: set[tuple] = set()
+        order: list[cf.Future] = []  # submission order, for deterministic tells
+        try:
+            while True:
+                # fill: propose until the executor is saturated or the budget
+                # (records + in-flight) is fully committed
+                while True:
+                    want = min(self.q - len(inflight),
+                               self.max_evals - len(self.db) - len(inflight))
+                    if want <= 0:
+                        break
+                    progressed = False
+                    for cfg in self.search.ask(want):
+                        key = config_key(cfg)
+                        if not self.search.dedups_against_db:
+                            if self.db.contains(cfg):
+                                # GP: a proposal duplicating a *recorded*
+                                # config consumes budget unrun (the paper's
+                                # budget asymmetry)
+                                self._tell_skipped(cfg)
+                                progressed = True
+                                continue
+                            if key in keys_inflight:
+                                # duplicate of an unmeasured in-flight config:
+                                # skipping now would record a NaN objective as
+                                # the config's canonical lookup entry and
+                                # erase its constant-liar row — defer instead
+                                # until the real result lands
+                                continue
+                        fut = self.executor.submit(cfg)
+                        inflight[fut] = cfg
+                        keys_inflight.add(key)
+                        order.append(fut)
+                        progressed = True
+                    if not progressed:
+                        break  # only deferred duplicates: wait for results
+                if not inflight:
+                    break  # budget fully recorded (evals + skips)
+                done, _ = cf.wait(list(inflight), return_when=cf.FIRST_COMPLETED)
+                for fut in [f for f in order if f in done]:
+                    cfg = inflight.pop(fut)
+                    keys_inflight.discard(config_key(cfg))
+                    order.remove(fut)
+                    self._tell(cfg, fut.result())
+        except BaseException:
+            # a failing future abandons its siblings; release their pending
+            # slots so a caller that catches and re-runs isn't poisoned
+            for cfg in inflight.values():
+                self.search.clear_pending(cfg)
+            raise
+
+    def result(self) -> SearchResult:
+        """Summary over the database (complete or mid-flight)."""
+        recs = self.db.records
+        return SearchResult(
+            db=self.db, best=self.db.best(),
+            n_evaluated=sum(1 for r in recs if r.status == OK),
+            n_skipped=sum(1 for r in recs if r.status == SKIPPED_DUPLICATE),
+            n_failed=sum(1 for r in recs if r.status == FAILED),
+            learner=self.learner,
+        )

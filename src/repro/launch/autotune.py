@@ -1,10 +1,17 @@
-"""Autotuning CLI — the paper's ytopt interface (--max-evals / --learner).
+"""Autotuning CLI — the paper's ytopt interface (--max-evals / --learner),
+now a thin adapter over :class:`repro.engine.Campaign`.
 
     PYTHONPATH=src python -m repro.launch.autotune --kernel syr2k \
         --max-evals 30 --learner RF --db results/syr2k_rf
 
 Kernels are tuned on the host-timed backend (B1) at bench sizes; pass
 --backend cost for the TPU-model backend (B2) at paper LARGE sizes.
+
+--parallel N keeps N candidate evaluations in flight (constant-liar
+batching over a thread pool); N=1 is the paper's serial loop, bit-for-bit.
+--resume requires --db and continues a killed campaign from its JSONL
+checkpoint: completed evaluations are never re-run, and the campaign
+performs exactly the remaining budget.
 
 --warm-start STORE_DIR seeds the campaign from a repro.dispatch TuningStore:
 the store's nearest tuned config (by log-scale shape distance) is evaluated
@@ -18,47 +25,14 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
-
-from repro.core import EvalResult, TimingEvaluator, autotune
+from repro.core import TimingEvaluator, autotune
 from repro.core.findmin import importance_report
-from repro.kernels import model_kernels as MK
-from repro.kernels import ref as R
-from repro.kernels import variants as V
+from repro.kernels.problems import (
+    bench_problem,
+    make_cost_evaluator,
+    problem_signature_for,
+)
 from repro.kernels.spaces import KERNEL_SPACES, kernel_space
-
-BENCH_PROBLEMS = {
-    "syr2k": lambda: (V.syr2k_host(R.init_syr2k(240, 200)), None),
-    "mm3": lambda: (V.mm3_host(R.init_mm3(200, 180, 160, 150, 170)), None),
-    "lu": lambda: (V.lu_host(R.init_lu(256)), None),
-    "heat3d": lambda: (V.heat3d_host(R.init_heat3d(40), tsteps=8), None),
-    "covariance": lambda: (V.covariance_host(R.init_covariance(300, 240)), None),
-    "floyd_warshall": lambda: (V.floyd_warshall_host(R.init_floyd_warshall(240)), None),
-    "flash_attention": lambda: (
-        MK.flash_attention_host(MK.init_flash_attention(4, 128, 128, 64)), None),
-    "matmul": lambda: (MK.matmul_host(MK.init_matmul(256, 192, 224)), None),
-}
-
-# problem dims behind BENCH_PROBLEMS (heat3d includes its tsteps knob)
-BENCH_DIMS = {
-    "syr2k": (240, 200),
-    "mm3": (200, 180, 160, 150, 170),
-    "lu": (256,),
-    "heat3d": (40, 8),
-    "covariance": (300, 240),
-    "floyd_warshall": (240,),
-    "flash_attention": (4, 128, 128, 64),
-    "matmul": (256, 192, 224),
-}
-
-
-def _signature(kernel: str, backend: str):
-    """Per-argument store signature — the same scheme repro.dispatch derives
-    from runtime args, so published configs resolve at dispatch() time."""
-    if backend == "cost":
-        from benchmarks.pallas_tuning import LARGE_SHAPES
-        return R.problem_signature(kernel, *LARGE_SHAPES[kernel])
-    return R.problem_signature(kernel, *BENCH_DIMS[kernel])
 
 
 def main(argv=None) -> int:
@@ -70,41 +44,48 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="host", choices=["host", "cost"])
     ap.add_argument("--db", default=None, help="performance database directory")
     ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--parallel", type=int, default=1, metavar="N",
+                    help="candidate evaluations in flight (1 = serial paper loop)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue a killed campaign from --db's JSONL checkpoint")
     ap.add_argument("--warm-start", default=None, metavar="STORE_DIR",
                     help="TuningStore to warm-start from (nearest-neighbor seed)")
     ap.add_argument("--store", default=None, metavar="STORE_DIR",
                     help="TuningStore to publish this campaign's best into")
     args = ap.parse_args(argv)
 
+    if args.resume and not args.db:
+        ap.error("--resume requires --db (the checkpoint to resume from)")
+
     if args.backend == "host":
-        factory, _ = BENCH_PROBLEMS[args.kernel]()
-        evaluator = TimingEvaluator(factory, repeats=2, warmup=1)
+        evaluator = TimingEvaluator(bench_problem(args.kernel), repeats=2, warmup=1)
         space = kernel_space(args.kernel, target="host", seed=args.seed)
     else:
-        from benchmarks.pallas_tuning import LARGE_SHAPES, make_evaluator
-        evaluator = make_evaluator(args.kernel)
+        evaluator = make_cost_evaluator(args.kernel)
         space = kernel_space(args.kernel, target="tpu", seed=args.seed)
 
-    sig = _signature(args.kernel, args.backend)
+    sig = problem_signature_for(args.kernel, args.backend)
     warm_cfgs, warm_recs = None, None
     if args.warm_start:
-        from repro.dispatch import TuningStore, resolve, signature_distance
-        ws = TuningStore(args.warm_start)
-        hit = resolve(ws, args.kernel, sig, args.backend)
-        if hit is not None:
-            warm_cfgs = [dict(hit.config)]
-            ranked = sorted(
-                ws.records(kernel=args.kernel, backend=args.backend),
-                key=lambda r: signature_distance(sig, r.signature))
-            warm_recs = [(dict(r.config), r.objective) for r in ranked[:3]
-                         if signature_distance(sig, r.signature) != float("inf")]
-            print(f"warm-start: seeded from {len(warm_recs)} store record(s), "
-                  f"nearest at distance {hit.distance:.3f}")
+        from repro.dispatch import TuningStore
+        from repro.dispatch.lookup import warm_start_material
+        warm_cfgs, warm_recs = warm_start_material(
+            TuningStore(args.warm_start), args.kernel, sig, args.backend)
+        if warm_cfgs is not None:
+            print(f"warm-start: nearest store config re-evaluated first, "
+                  f"{len(warm_recs or [])} neighbor(s) seed the surrogate")
         else:
             print("warm-start: store has no compatible record; cold start")
 
+    if args.resume:
+        from repro.core.database import PerformanceDatabase
+        k = len(PerformanceDatabase(args.db).records)
+        print(f"resume: {k} record(s) checkpointed, "
+              f"{max(0, args.max_evals - k)} evaluation(s) remaining")
+
     res = autotune(space, evaluator, max_evals=args.max_evals,
                    learner=args.learner, seed=args.seed, db_path=args.db,
+                   parallel=args.parallel,
                    warm_start=warm_cfgs, warm_start_records=warm_recs)
 
     if args.store and res.best is not None:

@@ -1,0 +1,470 @@
+"""repro.engine: the unified campaign engine — q=1 batched == legacy serial
+trajectories (RF and GP), parallel executors with exact budget accounting and
+wall-clock speedup, crash-safe resume from the PerformanceDatabase JSONL,
+concurrent TuningStore publication, the single-deadline drain, serve-step
+hot-swap on invalidate, and the roofline cost backend."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import EvalResult
+from repro.core.database import FAILED, OK, SKIPPED_DUPLICATE
+from repro.core.search import BayesianSearch, run_search
+from repro.core.space import Categorical, ConfigurationSpace, Ordinal
+from repro.engine import Campaign, InlineExecutor, ThreadExecutor, evaluator_for_spec
+
+TILES = (4, 8, 16, 32, 64, 96, 128)
+
+
+def small_space(seed=1234):
+    cs = ConfigurationSpace(seed=seed)
+    cs.add_hyperparameters([
+        Categorical("pack", (True, False), default=False),
+        Ordinal("t1", TILES, default=96),
+        Ordinal("t2", TILES, default=96),
+    ])
+    return cs
+
+
+def objective(cfg) -> float:
+    return (1.0 - 0.3 * bool(cfg["pack"])
+            + 0.004 * abs(int(cfg["t1"]) - 64)
+            + 0.002 * abs(int(cfg["t2"]) - 32))
+
+
+def evaluator(cfg) -> EvalResult:
+    return EvalResult(objective(cfg), True, {})
+
+
+def _records(db):
+    return [(r.status, r.config, r.objective) for r in db.records]
+
+
+def _scale_space(seed=1234):
+    cs = ConfigurationSpace(seed=seed)
+    cs.add_hyperparameter(Ordinal("s", (1, 2, 4, 8, 16), default=1))
+    return cs
+
+
+# ---------------------------------------------------------------------------
+# q=1 determinism: the batched engine must reproduce the legacy serial loop
+# ---------------------------------------------------------------------------
+
+
+def _legacy_serial(learner, seed, max_evals, warm=None):
+    """The pre-engine run_search loop, inlined verbatim: the reference the
+    q=1 Campaign must match config-for-config at a fixed seed."""
+    search = BayesianSearch(small_space(), learner=learner, seed=seed)
+    db = search.db
+    evaluated = []
+    for cfg in warm or []:
+        if len(db) >= max_evals:
+            break
+        if db.contains(cfg):
+            continue
+        evaluated.append(dict(cfg))
+        search.tell(cfg, evaluator(cfg))
+    while len(db) < max_evals:
+        cfg = search.ask()
+        if not search.dedups_against_db and db.contains(cfg):
+            search.tell_skipped(cfg)
+        else:
+            evaluated.append(dict(cfg))
+            search.tell(cfg, evaluator(cfg))
+    return evaluated, _records(db)
+
+
+@pytest.mark.parametrize("learner", ["RF", "GP"])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_q1_matches_legacy_serial_trajectory(learner, seed):
+    warm = [small_space().default_configuration()]
+    ref_evals, ref_records = _legacy_serial(learner, seed, 20, warm=warm)
+
+    got_evals = []
+
+    def spy(cfg):
+        got_evals.append(dict(cfg))
+        return evaluator(cfg)
+
+    res = Campaign(small_space(), spy, max_evals=20, learner=learner,
+                   seed=seed, parallel=1, warm_start=warm).run()
+    # same configs, same order — both the evaluation sequence and the full
+    # record stream (including GP duplicate-skips) are identical
+    assert got_evals == ref_evals
+    assert _records(res.db) == ref_records
+
+
+def test_gp_parallel_duplicates_still_consume_budget():
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameters([Categorical("a", (0, 1)), Categorical("b", (0, 1))])
+    res = Campaign(cs, lambda c: EvalResult(float(c["a"] + c["b"]), True, {}),
+                   max_evals=30, learner="GP", seed=0, n_initial=4,
+                   parallel=4).run()
+    assert len(res.db) == 30
+    assert res.n_skipped >= 20
+    assert any(r.status == SKIPPED_DUPLICATE for r in res.db.records)
+
+
+def test_gp_parallel_never_skips_unmeasured_configs():
+    """A GP proposal duplicating an *in-flight* (unmeasured) config must be
+    deferred, not skipped: skipping would write a NaN objective as the
+    config's canonical lookup entry and erase its constant-liar row."""
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameter(Categorical("x", (0, 1)))
+
+    def slow(c):
+        time.sleep(0.05)
+        return EvalResult(float(c["x"]), True, {})
+
+    res = Campaign(cs, slow, max_evals=8, learner="GP", seed=0,
+                   n_initial=2, parallel=4).run()
+    assert len(res.db) == 8
+    for r in res.db.records:
+        if r.status == SKIPPED_DUPLICATE:
+            # every skip points at a real, already-measured record
+            assert r.info["duplicate_of"] is not None
+            assert np.isfinite(r.objective)
+    # the canonical lookup entry per config is a measured one
+    for cfg in ({"x": 0}, {"x": 1}):
+        rec = res.db.lookup(cfg)
+        assert rec is not None and rec.status != SKIPPED_DUPLICATE
+
+
+# ---------------------------------------------------------------------------
+# parallel execution: exact budget, distinct in-flight candidates, speedup
+# ---------------------------------------------------------------------------
+
+
+def _timed_campaign(parallel, sleep_sec=0.25, max_evals=12):
+    calls = []
+    lock = threading.Lock()
+
+    def padded(cfg):
+        with lock:
+            calls.append(dict(cfg))
+        time.sleep(sleep_sec)
+        return EvalResult(objective(cfg), True, {})
+
+    t0 = time.perf_counter()
+    res = Campaign(small_space(), padded, max_evals=max_evals, learner="RF",
+                   seed=3, n_initial=4, parallel=parallel).run()
+    return time.perf_counter() - t0, res, calls
+
+
+def test_parallel_campaign_budget_and_speedup():
+    wall_serial, res_s, calls_s = _timed_campaign(parallel=1)
+    wall_par, res_p, calls_p = _timed_campaign(parallel=4)
+    # exact budget at any width; RF never evaluates a config twice
+    for res, calls in ((res_s, calls_s), (res_p, calls_p)):
+        assert len(res.db) == 12 and len(calls) == 12
+        keys = [tuple(sorted(c.items())) for c in calls]
+        assert len(set(keys)) == len(keys)
+    # the acceptance bar: >= 2x wall-clock at --parallel 4, equal max_evals
+    assert wall_par * 2.0 <= wall_serial, (wall_serial, wall_par)
+    # constant-liar batching still finds a competitive optimum
+    assert res_p.best.objective <= res_s.best.objective * 1.5
+
+
+def test_external_executor_is_not_shut_down():
+    ex = ThreadExecutor(evaluator, max_workers=2)
+    try:
+        res = Campaign(small_space(), executor=ex, max_evals=8, seed=1).run()
+        assert len(res.db) == 8
+        # still usable: the campaign must not have shut the pool down
+        assert ex.submit(small_space().default_configuration()).result().ok
+    finally:
+        ex.shutdown()
+
+
+def test_inline_executor_propagates_exceptions():
+    def boom(cfg):
+        raise RuntimeError("evaluator crash")
+
+    with pytest.raises(RuntimeError, match="evaluator crash"):
+        Campaign(small_space(), boom, max_evals=4, seed=0).run()
+
+
+# ---------------------------------------------------------------------------
+# crash-safe resume: killed after k evals -> exactly max_evals - k more
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_resumes_from_jsonl_checkpoint(tmp_path):
+    db_path = str(tmp_path / "camp")
+    k, total = 7, 18
+
+    class Killed(BaseException):
+        pass
+
+    first_run = []
+
+    def dying(cfg):
+        if len(first_run) >= k:
+            raise Killed()  # simulates the host dying mid-campaign
+        first_run.append(dict(cfg))
+        return evaluator(cfg)
+
+    with pytest.raises(Killed):
+        Campaign(small_space(), dying, max_evals=total, seed=5,
+                 db_path=db_path).run()
+    assert len(first_run) == k
+
+    second_run = []
+
+    def counting(cfg):
+        second_run.append(dict(cfg))
+        return evaluator(cfg)
+
+    resumed = Campaign(small_space(), counting, max_evals=total, seed=5,
+                       db_path=db_path)
+    assert resumed.remaining == total - k  # budget accounting is exact
+    res = resumed.run()
+    assert len(second_run) == total - k
+    assert len(res.db) == total
+    # no config re-evaluated across the kill/resume boundary
+    seen_before = {tuple(sorted(c.items())) for c in first_run}
+    seen_after = {tuple(sorted(c.items())) for c in second_run}
+    assert not (seen_before & seen_after)
+
+
+def test_parallel_resume_exact_budget(tmp_path):
+    db_path = str(tmp_path / "camp")
+    Campaign(small_space(), evaluator, max_evals=9, seed=2, db_path=db_path,
+             parallel=3).run()
+    calls = []
+
+    def counting(cfg):
+        calls.append(dict(cfg))
+        return evaluator(cfg)
+
+    res = Campaign(small_space(), counting, max_evals=21, seed=2,
+                   db_path=db_path, parallel=3).run()
+    assert len(res.db) == 21 and len(calls) == 12
+
+
+# ---------------------------------------------------------------------------
+# store concurrency: >= 4 executor threads publishing at once
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_store_put_from_executor_threads(tmp_path):
+    from repro.dispatch import TuningRecord, TuningStore
+
+    path = str(tmp_path / "store")
+    store = TuningStore(path)
+    n_threads, n_puts = 6, 25
+    errors = []
+
+    def hammer(tid):
+        try:
+            for i in range(n_puts):
+                store.put(TuningRecord(
+                    "k", ((64,),), "host",
+                    {"s": tid * n_puts + i}, 1.0 / (1 + tid * n_puts + i)))
+                store.put(TuningRecord(  # per-thread key, monotone improving
+                    f"k{tid}", ((64,),), "host", {"s": i}, float(n_puts - i)))
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    # a fresh reader folds the log to the true global best per key
+    fresh = TuningStore(path)
+    best = fresh.get("k", ((64,),), "host")
+    assert best is not None
+    assert best.objective == pytest.approx(1.0 / (n_threads * n_puts))
+    for tid in range(n_threads):
+        rec = fresh.get(f"k{tid}", ((64,),), "host")
+        assert rec is not None and rec.config == {"s": n_puts - 1}
+
+
+# ---------------------------------------------------------------------------
+# drain: one deadline shared across futures
+# ---------------------------------------------------------------------------
+
+
+def test_drain_timeout_is_a_shared_deadline(tmp_path):
+    from repro.dispatch import BackgroundTuner, TuningStore
+
+    cs = ConfigurationSpace(seed=0)
+    cs.add_hyperparameter(Ordinal("s", (1, 2, 4, 8), default=1))
+
+    def slow(cfg):
+        time.sleep(0.1)
+        return EvalResult(1.0 / cfg["s"], True, {})
+
+    store = TuningStore(str(tmp_path / "s"))
+    tuner = BackgroundTuner(store, max_workers=1, max_evals=3, n_initial=1)
+    try:
+        # three ~0.3s campaigns on one worker run back-to-back (~0.9s total);
+        # a 0.35s drain must give up at ~0.35s — per-future timeouts would
+        # stretch to ~0.9s without ever raising
+        for i, dims in enumerate([((4,),), ((8,),), ((16,),)]):
+            tuner.submit("k", dims, "host", space=cs, evaluator=slow)
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError):
+            tuner.drain(timeout=0.35)
+        assert time.perf_counter() - t0 < 0.7
+        tuner.drain()  # no deadline: everything finishes cleanly
+        assert tuner.errors == []
+    finally:
+        tuner.shutdown()
+
+
+def test_submit_after_shutdown_degrades_not_crashes(tmp_path):
+    from repro.dispatch import BackgroundTuner, TuningStore
+
+    store = TuningStore(str(tmp_path / "s"))
+    tuner = BackgroundTuner(store, max_workers=1)
+    tuner.shutdown()
+    # a serving-path miss enqueued against a shut-down tuner must be a no-op
+    assert tuner.submit("k", ((4,),), "host", space=small_space(),
+                        evaluator=evaluator) is None
+    assert tuner.drain() == []
+
+
+# ---------------------------------------------------------------------------
+# serve-step hot swap: jit_cached entries rebuild on invalidate()
+# ---------------------------------------------------------------------------
+
+
+def test_invalidate_rebuilds_jit_cached_serve_step(tmp_path):
+    from repro.dispatch import DispatchService, TuningRecord, TuningStore, register
+
+    register("engine_toy_scale", builder=lambda cfg: lambda x: x * cfg["s"],
+             space=lambda target="host", seed=1234: _scale_space(seed))
+    store = TuningStore(str(tmp_path / "s"))
+    store.put(TuningRecord("engine_toy_scale", ((4,),), "host", {"s": 2}, 0.5))
+    svc = DispatchService(store)
+    x = np.arange(4.0)
+
+    def step(v):  # a serve step: dispatch resolves at trace time
+        return svc.dispatch("engine_toy_scale", v)(v)
+
+    serve = svc.jit_cached("serve_step/toy", step)
+    np.testing.assert_array_equal(np.asarray(serve(x)), x * 2)
+    # a background campaign publishes a better config and hot-swaps it in
+    store.put(TuningRecord("engine_toy_scale", ((4,),), "host", {"s": 8}, 0.1))
+    svc.invalidate("engine_toy_scale", ((4,),))
+    # the held reference re-traces and bakes the new config in
+    np.testing.assert_array_equal(np.asarray(serve(x)), x * 8)
+    assert svc.stats["serve_rebuilt"] == 1
+    # repeated calls reuse the rebuilt executable (no re-trace per call)
+    np.testing.assert_array_equal(np.asarray(serve(x)), x * 8)
+    assert svc.stats["serve_rebuilt"] == 1
+
+
+def test_jit_cached_proxy_is_stable_across_invalidate():
+    from repro.dispatch import DispatchService
+
+    svc = DispatchService()
+    f1 = svc.jit_cached("serve/m", lambda x: x + 1)
+    svc.invalidate()
+    f2 = svc.jit_cached("serve/m", lambda x: x + 1)
+    assert f1 is f2
+
+
+# ---------------------------------------------------------------------------
+# the roofline cost backend (VariantSpec.make_evaluator)
+# ---------------------------------------------------------------------------
+
+
+def test_evaluator_for_spec_prefers_make_evaluator():
+    from repro.dispatch.registry import VariantSpec
+
+    marker = lambda cfg: EvalResult(0.123, True, {})  # noqa: E731
+    spec = VariantSpec(name="x", builder=lambda cfg: (lambda: None),
+                       space=lambda target: small_space(),
+                       make_evaluator=lambda factory: marker)
+    assert evaluator_for_spec(spec, lambda cfg: (None, ())) is marker
+
+
+def test_dims_from_signature_roundtrip():
+    from repro.kernels.problems import LARGE_SHAPES, dims_from_signature
+    from repro.kernels.ref import problem_signature
+
+    for name, dims in LARGE_SHAPES.items():
+        sig = problem_signature(name, *dims)
+        assert dims_from_signature(name, sig) == tuple(dims), name
+
+
+def test_cost_evaluator_scores_with_kernel_cost():
+    from repro.kernels.cost import kernel_cost
+    from repro.kernels.problems import make_cost_evaluator
+
+    cfg = dict(bm=128, bn=128, bk=128, pack=True)
+    res = make_cost_evaluator("matmul", (256, 192, 224))(cfg)
+    t, _ = kernel_cost("matmul", cfg, 256, 192, 224)
+    assert res.ok and res.objective == pytest.approx(t)
+    # infeasible (VMEM-blowing) config -> failed with penalty semantics
+    bad = make_cost_evaluator("matmul", (4096, 4096, 4096))(
+        dict(bm=1024, bn=1024, bk=2048, pack=True))
+    assert not bad.ok
+
+
+def test_cost_backend_background_tuning(tmp_path):
+    """The ROADMAP item end-to-end: a background tuner attached to a
+    cost-backend service tunes analytically — no TPU, no wall-clocking."""
+    from repro.dispatch import BackgroundTuner, DispatchService, TuningStore
+    from repro.dispatch import registry as registry_mod
+    from repro.kernels.problems import register_cost_backend
+
+    saved = dict(registry_mod._REGISTRY)
+    try:
+        register_cost_backend()
+        store = TuningStore(str(tmp_path / "s"))
+        tuner = BackgroundTuner(store, max_workers=1, max_evals=6, n_initial=2)
+        svc = DispatchService(store, backend="cost", target="tpu",
+                              tuner=tuner, jit=False)
+        try:
+            A = np.zeros((256, 192), np.float32)
+            B = np.zeros((192, 224), np.float32)
+            svc.dispatch("matmul", A, B)  # miss -> enqueue a cost campaign
+            assert svc.stats["bg_enqueued"] == 1
+            tuner.drain()
+            assert tuner.errors == []
+            recs = store.records(kernel="matmul", backend="cost")
+            assert recs and recs[0].source == "background"
+            assert np.isfinite(recs[0].objective)
+        finally:
+            tuner.shutdown()
+    finally:
+        registry_mod._REGISTRY.clear()
+        registry_mod._REGISTRY.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# engine plumbing details
+# ---------------------------------------------------------------------------
+
+
+def test_run_search_parallel_passthrough():
+    res = run_search(small_space(), evaluator, max_evals=10, learner="RF",
+                     seed=4, parallel=3)
+    assert len(res.db) == 10 and res.n_evaluated == 10
+
+
+def test_campaign_requires_evaluator_or_executor():
+    with pytest.raises(ValueError):
+        Campaign(small_space())
+
+
+def test_failed_evaluations_counted_at_any_width():
+    def flaky(cfg):
+        if bool(cfg["pack"]):
+            return EvalResult(1e9, False, {"error": "synthetic"})
+        return evaluator(cfg)
+
+    res = Campaign(small_space(), flaky, max_evals=20, seed=2, parallel=4).run()
+    assert len(res.db) == 20
+    assert res.n_failed == sum(1 for r in res.db.records if r.status == FAILED)
+    assert res.n_failed > 0
+    assert res.best is not None and not bool(res.best.config["pack"])
+    assert res.n_evaluated == sum(1 for r in res.db.records if r.status == OK)
