@@ -38,6 +38,10 @@ class SearchResult:
     n_skipped: int
     n_failed: int
     learner: str
+    # optimizer-overhead telemetry (CATBench-style): cumulative seconds the
+    # campaign spent inside ask/tell vs waiting on evaluations. None for
+    # results not produced by a Campaign.
+    timings: dict | None = None
 
     def summary(self) -> str:
         b = self.best
@@ -88,6 +92,14 @@ class BayesianSearch:
         self.db = db if db is not None else PerformanceDatabase()
         self._init_queue: list[dict] = []
         self._model = None
+        # hot-path caches: encoded training rows by record index (the DB is
+        # append-only, so rows never go stale), the persistent GP whose
+        # Cholesky factor extends incrementally across tells, and — inside an
+        # ask(n) batch — the sampled-and-encoded base candidate pool
+        self._enc_by_index: dict[int, np.ndarray] = {}
+        self._gp: surrogates.GaussianProcess | None = None
+        self._batch_active = False
+        self._pool_base: tuple[list[dict], np.ndarray] | None = None
         # configs proposed but not yet told: config_key -> config. They act
         # as constant-liar observations in _training_data and are excluded
         # from re-proposal, enabling n candidates in flight at once.
@@ -95,7 +107,11 @@ class BayesianSearch:
         # warm start: (config, objective) pairs from a prior campaign (e.g. a
         # TuningStore nearest neighbor) become virtual observations — they seed
         # the surrogate without consuming evaluation budget, and each prior
-        # replaces one random initialization sample.
+        # replaces one random initialization sample. Priors occupy the leading
+        # training rows (see _training_data); note this row layout changed in
+        # the vectorization PR (records-first before), so *warm-started*
+        # trajectories differ from older runs — the bit-identity contract
+        # covers prior-free campaigns, which are the paper's.
         self._prior_X, self._prior_y = self._encode_priors(prior_records or [])
         self.n_priors = 0 if self._prior_y is None else len(self._prior_y)
         self.n_initial = max(1, n_initial - self.n_priors) if self.n_priors else n_initial
@@ -139,12 +155,31 @@ class BayesianSearch:
             return (None, None) if not self._pending else self._liar_augment(None, None)
         ok_vals = [r.objective for r in recs if r.status == OK]
         cap = (max(ok_vals) * 2.0 + 1e-9) if ok_vals else 1.0
-        X = self.space.encode_many([r.config for r in recs])
+        X = self._encode_records(recs)
         y = np.array([min(r.objective, cap) for r in recs])
         if self._prior_X is not None:
-            X = np.concatenate([X, self._prior_X])
-            y = np.concatenate([y, self._prior_y])
+            # priors lead so the row layout is [fixed priors, append-only
+            # records, liar tail]: each tell extends the matrix instead of
+            # inserting mid-array, which is what lets the GP's incremental
+            # Cholesky reuse its cached prefix on warm-started campaigns
+            X = np.concatenate([self._prior_X, X])
+            y = np.concatenate([self._prior_y, y])
         return self._liar_augment(X, y)
+
+    def _encode_records(self, recs) -> np.ndarray:
+        """Encoded feature rows for DB records, memoized by record index (the
+        DB is append-only): each record is encoded exactly once per campaign
+        instead of once per ask. Row values are identical to
+        ``space.encode_many([r.config for r in recs])``."""
+        rows = []
+        for r in recs:
+            row = self._enc_by_index.get(r.index)
+            if row is None:
+                row = self._enc_by_index[r.index] = self.space.encode(r.config)
+            rows.append(row)
+        if not rows:
+            return np.zeros((0, self.space.n_features()))
+        return np.stack(rows)
 
     def _liar_augment(self, X, y):
         """Append one (encoded config, lied objective) row per pending eval.
@@ -181,26 +216,47 @@ class BayesianSearch:
     def _is_fresh(self, config: Mapping[str, Any]) -> bool:
         return not self.db.contains(config) and not self.is_pending(config)
 
-    def _candidate_pool(self) -> list[dict]:
-        pool = self.space.sample_configurations(self.n_candidates, self.rng)
+    def _candidate_pool(self) -> tuple[list[dict], np.ndarray]:
+        """Candidate pool plus its encoded feature matrix. Inside an
+        ``ask(n)`` batch the ``n_candidates`` base samples are drawn and
+        encoded exactly once (the first model-guided proposal caches them);
+        later proposals only draw fresh mutation candidates around the
+        incumbent — their constant-liar rows already steer them apart, so
+        re-sampling the whole pool per proposal bought nothing but CPU."""
+        if self._batch_active and self._pool_base is not None:
+            base, Xb = self._pool_base
+        else:
+            base = self.space.sample_configurations(self.n_candidates, self.rng)
+            Xb = self.space.encode_many(base)
+            if self._batch_active:
+                self._pool_base = (base, Xb)
         best = self.db.best()
         if best is not None:  # local perturbations around incumbent
-            pool += [self.space.mutate(best.config, self.rng) for _ in range(self.n_candidates // 8)]
-        return pool
+            extra = [self.space.mutate(best.config, self.rng)
+                     for _ in range(self.n_candidates // 8)]
+            if extra:
+                return base + extra, np.concatenate([Xb, self.space.encode_many(extra)])
+        return list(base), Xb
 
     def ask(self, n: int | None = None) -> dict | list[dict]:
         """Propose the next candidate(s). ``ask()`` returns a single config
         (legacy serial API, no pending registration). ``ask(n)`` returns a
         list of ``n`` configs, each registered pending with a constant-liar
         observation so they can be evaluated concurrently; callers must
-        ``tell``/``tell_skipped`` each one to release its pending slot."""
+        ``tell``/``tell_skipped`` each one to release its pending slot.
+        The base candidate pool is sampled and encoded once per batch, so
+        ``ask(1)`` consumes RNG exactly like the legacy serial ``ask()``."""
         if n is None:
             return self._ask_one()
         batch = []
-        for _ in range(n):
-            cfg = self._ask_one()
-            self.mark_pending(cfg)
-            batch.append(cfg)
+        self._batch_active, self._pool_base = True, None
+        try:
+            for _ in range(n):
+                cfg = self._ask_one()
+                self.mark_pending(cfg)
+                batch.append(cfg)
+        finally:
+            self._batch_active, self._pool_base = False, None
         return batch
 
     def _ask_one(self) -> dict:
@@ -218,12 +274,20 @@ class BayesianSearch:
         X, y = self._training_data()
         if X is None or len(np.unique(y)) < 2:
             return self.space.sample_configuration(self.rng)
-        model = surrogates.make_learner(self.learner_name, seed=int(self.rng.integers(2**31)))
-        model.fit(X, y)
+        seed = int(self.rng.integers(2**31))  # drawn even on the GP-reuse path
+        if self.learner_name == "GP":
+            # persistent GP: the cached Cholesky factor extends incrementally
+            # over the unchanged row-prefix instead of refitting the whole
+            # length-scale grid on every proposal (see GaussianProcess)
+            if self._gp is None:
+                self._gp = surrogates.make_learner("GP", seed=seed)
+            model = self._gp.partial_fit(X, y)
+        else:
+            model = surrogates.make_learner(self.learner_name, seed=seed)
+            model.fit(X, y)
         self._model = model
 
-        pool = self._candidate_pool()
-        Xc = self.space.encode_many(pool)
+        pool, Xc = self._candidate_pool()
         mu, sigma = model.predict(Xc)
         best = self.db.best()
         scores = self.acq(mu, sigma, kappa=self.kappa,

@@ -305,6 +305,66 @@ class ConfigurationSpace:
         self._forbidden: list[ForbiddenClause] = []
         self._rng = np.random.default_rng(seed)
         self.seed = seed
+        # structure caches (the sampler/encoder hot path walks these per
+        # config): invalidated whenever a parameter or condition is added
+        self._topo_cache: list[str] | None = None
+        self._conds_for_cache: dict[str, list[InCondition]] | None = None
+        self._sorted_names_cache: list[str] | None = None
+        self._sample_plan_cache: list | None = None
+        self._decl_sorted_cache: bool | None = None
+
+    def _invalidate_structure_caches(self) -> None:
+        self._topo_cache = None
+        self._conds_for_cache = None
+        self._sorted_names_cache = None
+        self._sample_plan_cache = None
+        self._decl_sorted_cache = None
+
+    def _sorted_names(self) -> list[str]:
+        if self._sorted_names_cache is None:
+            self._sorted_names_cache = sorted(self._params)
+        return self._sorted_names_cache
+
+    def _decl_sorted(self) -> bool:
+        if self._decl_sorted_cache is None:
+            self._decl_sorted_cache = list(self._params) == self._sorted_names()
+        return self._decl_sorted_cache
+
+    def _sample_plan(self):
+        """Per-parameter draw plan for the sampling hot path: finite choice
+        sets (Categorical/Ordinal) inline to ``choices[int(rng.integers(n))]``
+        — the identical call on the identical stream, minus the method
+        dispatch — Constants skip the rng entirely (as their ``sample``
+        does), and everything else keeps its ``sample`` method."""
+        plan = self._sample_plan_cache
+        if plan is None:
+            plan = []
+            for name, hp in self._params.items():
+                if isinstance(hp, Categorical):
+                    plan.append((name, 0, hp.choices))
+                elif isinstance(hp, Ordinal):
+                    plan.append((name, 0, hp.sequence))
+                elif isinstance(hp, Constant):
+                    plan.append((name, 1, hp.value))
+                else:
+                    plan.append((name, 2, hp.sample))
+            self._sample_plan_cache = plan
+        return plan
+
+    def _draw_raw(self, rng: np.random.Generator) -> dict:
+        """One full raw assignment, drawn parameter-by-parameter in
+        declaration order — the exact RNG consumption of
+        ``{n: hp.sample(rng) for n, hp in self._params.items()}``."""
+        ri = rng.integers
+        draws = {}
+        for name, kind, data in self._sample_plan():
+            if kind == 0:
+                draws[name] = data[int(ri(len(data)))]
+            elif kind == 1:
+                draws[name] = data
+            else:
+                draws[name] = data(rng)
+        return draws
 
     # -- construction -------------------------------------------------------
 
@@ -312,6 +372,7 @@ class ConfigurationSpace:
         if hp.name in self._params:
             raise ValueError(f"duplicate hyperparameter {hp.name!r}")
         self._params[hp.name] = hp
+        self._invalidate_structure_caches()
         return hp
 
     def add_hyperparameters(self, hps: Iterable[Hyperparameter]) -> None:
@@ -325,6 +386,7 @@ class ConfigurationSpace:
         if cond.child == cond.parent:
             raise ValueError("self-condition")
         self._conditions.append(cond)
+        self._invalidate_structure_caches()
 
     def add_forbidden(self, clause: ForbiddenClause) -> None:
         self._forbidden.append(clause)
@@ -350,10 +412,19 @@ class ConfigurationSpace:
         return total
 
     def _conditions_for(self, name: str) -> list[InCondition]:
-        return [c for c in self._conditions if c.child == name]
+        cache = self._conds_for_cache
+        if cache is None:
+            cache = {n: [] for n in self._params}
+            for c in self._conditions:
+                cache[c.child].append(c)
+            self._conds_for_cache = cache
+        return cache[name]
 
     def _topo_order(self) -> list[str]:
-        # parents before children so activation can be decided in one pass
+        # parents before children so activation can be decided in one pass;
+        # memoized — the sampler calls this once per drawn configuration
+        if self._topo_cache is not None:
+            return self._topo_cache
         order, seen = [], set()
 
         def visit(name: str, stack: tuple = ()):  # DFS over condition parents
@@ -368,6 +439,7 @@ class ConfigurationSpace:
 
         for name in self._params:
             visit(name)
+        self._topo_cache = order
         return order
 
     def active_params(self, config: Mapping[str, Any]) -> list[str]:
@@ -413,18 +485,25 @@ class ConfigurationSpace:
 
     def _finish(self, draws: Mapping[str, Any]) -> dict:
         """Apply conditional activation to a full raw assignment."""
+        if not self._conditions:  # unconditional space: every draw is active
+            if self._decl_sorted():
+                # declaration order is already sorted: the draw dict IS the
+                # finished config (same keys, same order)
+                return draws if isinstance(draws, dict) else dict(draws)
+            return {name: draws[name] for name in self._sorted_names()}
         cfg: dict[str, Any] = {}
+        conds_for = self._conditions_for
         for name in self._topo_order():
-            if all(c.satisfied(cfg) for c in self._conditions_for(name)):
+            if all(c.satisfied(cfg) for c in conds_for(name)):
                 cfg[name] = draws[name]
         return dict(sorted(cfg.items()))
 
     def sample_configuration(self, rng: np.random.Generator | None = None) -> dict:
         rng = rng or self._rng
+        forbidden = self._forbidden
         for _ in range(1000):
-            draws = {n: hp.sample(rng) for n, hp in self._params.items()}
-            cfg = self._finish(draws)
-            if not any(f.violated(cfg) for f in self._forbidden):
+            cfg = self._finish(self._draw_raw(rng))
+            if not forbidden or not any(f.violated(cfg) for f in forbidden):
                 return cfg
         raise RuntimeError("forbidden clauses reject every sampled configuration")
 
@@ -478,16 +557,54 @@ class ConfigurationSpace:
         return np.concatenate(parts) if parts else np.zeros(0)
 
     def encode_many(self, configs: Sequence[Mapping[str, Any]]) -> np.ndarray:
-        if not configs:
+        """Batch feature encoding: one (n, n_features) array filled
+        column-block by column-block per parameter, instead of n per-config
+        ``encode`` calls each concatenating a dozen small arrays. Row values
+        are identical to ``encode`` — the same per-element arithmetic, just
+        applied across the batch (log-scaled parameters keep their scalar
+        ``math.log`` path so not even the last ulp moves)."""
+        n = len(configs)
+        if not n:
             return np.zeros((0, self.n_features()))
-        return np.stack([self.encode(c) for c in configs])
+        out = np.zeros((n, self.n_features()))
+        col = 0
+        for name, hp in self._params.items():
+            w = hp.n_features()
+            if w:
+                present = np.fromiter((name in c for c in configs), bool, count=n)
+                rows = np.flatnonzero(present)
+                if len(rows):
+                    vals = [configs[i][name] for i in rows]
+                    if isinstance(hp, Categorical):
+                        ch = hp.choices.index
+                        out[rows, col + np.fromiter((ch(v) for v in vals),
+                                                    np.int64, count=len(rows))] = 1.0
+                    elif isinstance(hp, Ordinal):
+                        sq = hp.sequence.index
+                        ranks = np.fromiter((sq(v) for v in vals),
+                                            np.float64, count=len(rows))
+                        out[rows, col] = ranks / max(len(hp.sequence) - 1, 1)
+                    elif isinstance(hp, (Integer, Float)) and not hp.log:
+                        arr = np.fromiter(vals, np.float64, count=len(rows))
+                        out[rows, col] = (arr - hp.low) / max(hp.high - hp.low, 1e-12)
+                    else:  # log-scaled (math.log semantics) or exotic kinds
+                        for i, v in zip(rows, vals):
+                            out[i, col:col + w] = hp.encode(v)
+            col += w
+            if self._conditions_for(name):
+                # inactive conditionals get their indicator slot set
+                for i, c in enumerate(configs):
+                    if name not in c:
+                        out[i, col] = 1.0
+                col += 1
+        return out
 
     # -- neighborhood (for local perturbation in the search) ------------------
 
     def mutate(self, config: Mapping[str, Any], rng: np.random.Generator | None = None) -> dict:
         """Perturb one active parameter; re-resolve activation."""
         rng = rng or self._rng
-        draws = {n: hp.sample(rng) for n, hp in self._params.items()}
+        draws = self._draw_raw(rng)
         draws.update({k: v for k, v in config.items()})
         active = [n for n in config if self._params[n].size > 1]
         if active:

@@ -59,6 +59,14 @@ class BackgroundTuner:
         self._futures: list[cf.Future] = []
         self._lock = threading.Lock()
         self.errors: list[tuple[tuple, BaseException]] = []
+        # optimizer-overhead telemetry, aggregated across campaigns from
+        # Campaign.timings: ask_sec + tell_sec is the CPU the tuner itself
+        # bills to the serving host (CATBench's first-class overhead metric);
+        # wait_sec is time blocked on evaluations. A serving dashboard that
+        # sees ask_sec rival the eval budget knows the surrogate — not the
+        # kernels — is eating the cores.
+        self.stats = {"campaigns": 0, "ask_sec": 0.0, "tell_sec": 0.0,
+                      "wait_sec": 0.0}
 
     # -- submission --------------------------------------------------------------
 
@@ -106,6 +114,11 @@ class BackgroundTuner:
                 space, evaluator, max_evals=max_evals, learner=self.learner,
                 seed=self.seed, n_initial=self.n_initial, parallel=self.parallel,
                 warm_start=warm_cfgs, warm_start_records=warm_recs).run()
+            if result.timings:
+                with self._lock:
+                    self.stats["campaigns"] += 1
+                    for k in ("ask_sec", "tell_sec", "wait_sec"):
+                        self.stats[k] += result.timings[k]
             if result.best is None:
                 return None
             rec = TuningRecord(

@@ -82,23 +82,25 @@ class DispatchService:
 
     # -- config resolution -------------------------------------------------------
 
-    def resolve_config(self, kernel: str, signature) -> tuple[dict, Resolution | None]:
-        """Store-resolved config for a signature, falling back to the
-        registered space default when the store is empty/absent."""
+    def _resolve_nostats(self, kernel: str, signature):
+        """Store resolution without touching stats or the lock; returns
+        ``(config, resolution, stat_name)`` so the caller can fold the stat
+        bump into whatever critical section it is already paying for."""
         res = None
         if self.store is not None:
             self.store.refresh()
             res = resolve(self.store, kernel, signature, self.backend)
+        if res is None:
+            return get_variant(kernel).default_config(self.target), None, "store_default"
+        return dict(res.config), res, "store_exact" if res.exact else "store_near"
+
+    def resolve_config(self, kernel: str, signature) -> tuple[dict, Resolution | None]:
+        """Store-resolved config for a signature, falling back to the
+        registered space default when the store is empty/absent."""
+        config, res, stat = self._resolve_nostats(kernel, signature)
         with self._lock:
-            if res is None:
-                self.stats["store_default"] += 1
-            elif res.exact:
-                self.stats["store_exact"] += 1
-            else:
-                self.stats["store_near"] += 1
-        if res is not None:
-            return dict(res.config), res
-        return get_variant(kernel).default_config(self.target), None
+            self.stats[stat] += 1
+        return config, res
 
     def _needs_tuning(self, res: Resolution | None) -> bool:
         if res is None:
@@ -119,7 +121,9 @@ class DispatchService:
         static_id = tuple(sorted(static_kw.items()))
         fast_key = (kernel, signature_key(sig), static_id)
         now = time.monotonic()
-        with self._lock:  # hot path: recent resolution -> zero store traffic
+        # hot path: ONE lock acquisition — fast-map read, executable lookup,
+        # and the hit-stat bump share a single critical section
+        with self._lock:
             entry = self._fast.get(fast_key)
             if entry is not None:
                 exec_key, expires = entry
@@ -128,14 +132,15 @@ class DispatchService:
                     self.stats["exec_hit"] += 1
                     return fn
                 del self._fast[fast_key]  # expired or orphaned: don't leak
-        config, res = self.resolve_config(kernel, sig)
+        # miss path: resolve outside the lock (store refresh does file I/O),
+        # then fold the resolve stat and the executable-cache probe into one
+        # critical section
+        config, res, resolve_stat = self._resolve_nostats(kernel, sig)
         key = fast_key + (config_key(config),)
         with self._lock:
+            self.stats[resolve_stat] += 1
             fn = self._exec.get(key)
-            if fn is not None:
-                self.stats["exec_hit"] += 1
-            else:
-                self.stats["exec_miss"] += 1
+            self.stats["exec_hit" if fn is not None else "exec_miss"] += 1
         built = None
         if fn is None and res is not None:
             # a store-resolved config is untrusted input to the serving path:
@@ -146,8 +151,6 @@ class DispatchService:
                 if args:
                     jax.eval_shape(built, *args)
             except Exception:
-                with self._lock:
-                    self.stats["build_failed"] += 1
                 # only an exact hit proves the record is bad for its own
                 # signature; a nearest neighbor may merely not transfer to
                 # this shape (e.g. an indivisible block), and quarantining it
@@ -158,14 +161,16 @@ class DispatchService:
                 config = spec.default_config(self.target)
                 key = fast_key + (config_key(config),)
                 with self._lock:
+                    self.stats["build_failed"] += 1
                     fn = self._exec.get(key)  # default may already be compiled
         if fn is None:
             if built is None:
                 built = spec.builder(config, **static_kw)
             fn = jax.jit(built) if self.jit else built
-            with self._lock:
-                fn = self._exec.setdefault(key, fn)
+        # publish: executable insert, fast-map store, and the TTL sweep share
+        # the final critical section
         with self._lock:
+            fn = self._exec.setdefault(key, fn)
             self._fast[fast_key] = (key, time.monotonic() + self.resolve_ttl_sec)
             if len(self._fast) > self.fast_sweep_size:
                 self._sweep_fast_locked(time.monotonic())

@@ -25,6 +25,7 @@ flight):
 from __future__ import annotations
 
 import concurrent.futures as cf
+import time
 from typing import Any, Callable, Mapping
 
 from repro.core.database import FAILED, OK, SKIPPED_DUPLICATE, PerformanceDatabase, Record
@@ -81,6 +82,13 @@ class Campaign:
             init_method=init_method, seed=seed, db=self.db,
             prior_records=warm_start_records,
         )
+        # optimizer-overhead telemetry: how much wall-clock the tuner itself
+        # costs (surrogate fits + acquisition scans in ask, DB appends in
+        # tell) vs time blocked on evaluation results. Fed into
+        # SearchResult.timings and aggregated by BackgroundTuner.stats so
+        # serving hosts can watch the tuner's CPU bill.
+        self.timings = {"ask_sec": 0.0, "tell_sec": 0.0, "wait_sec": 0.0,
+                        "n_asks": 0, "n_tells": 0}
 
     # -- introspection -----------------------------------------------------------
 
@@ -108,14 +116,27 @@ class Campaign:
         return self.result()
 
     def _tell(self, config: Mapping[str, Any], result: EvalResult) -> None:
+        t0 = time.perf_counter()
         rec = self.search.tell(config, result)
+        self.timings["tell_sec"] += time.perf_counter() - t0
+        self.timings["n_tells"] += 1
         if self.callback:
             self.callback(rec)
 
     def _tell_skipped(self, config: Mapping[str, Any]) -> None:
+        t0 = time.perf_counter()
         rec = self.search.tell_skipped(config)
+        self.timings["tell_sec"] += time.perf_counter() - t0
+        self.timings["n_tells"] += 1
         if self.callback:
             self.callback(rec)
+
+    def _ask(self, n: int) -> list[dict]:
+        t0 = time.perf_counter()
+        batch = self.search.ask(n)
+        self.timings["ask_sec"] += time.perf_counter() - t0
+        self.timings["n_asks"] += 1
+        return batch
 
     def _run_warm_start(self) -> None:
         """Evaluate warm-start configs first (known defaults, store bests) so
@@ -154,7 +175,7 @@ class Campaign:
                     if want <= 0:
                         break
                     progressed = False
-                    for cfg in self.search.ask(want):
+                    for cfg in self._ask(want):
                         key = config_key(cfg)
                         if not self.search.dedups_against_db:
                             if self.db.contains(cfg):
@@ -180,7 +201,9 @@ class Campaign:
                         break  # only deferred duplicates: wait for results
                 if not inflight:
                     break  # budget fully recorded (evals + skips)
+                t0 = time.perf_counter()
                 done, _ = cf.wait(list(inflight), return_when=cf.FIRST_COMPLETED)
+                self.timings["wait_sec"] += time.perf_counter() - t0
                 for fut in [f for f in order if f in done]:
                     cfg = inflight.pop(fut)
                     keys_inflight.discard(config_key(cfg))
@@ -202,4 +225,5 @@ class Campaign:
             n_skipped=sum(1 for r in recs if r.status == SKIPPED_DUPLICATE),
             n_failed=sum(1 for r in recs if r.status == FAILED),
             learner=self.learner,
+            timings=dict(self.timings),
         )

@@ -139,8 +139,11 @@ def gqa_decode(
     scale = scale if scale is not None else hd ** -0.5
 
     qg = q.reshape(B, K, G, hd)
-    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
-                   k_cache.astype(jnp.float32)) * scale
+    # bf16 Q/K stay in their storage dtype: preferred_element_type makes the
+    # contraction accumulate in f32 on the MXU without materializing f32
+    # copies of the cache in the decode hot loop
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
     slots = jnp.arange(S)
     if ring:
         kpos = cur_pos - jnp.mod(cur_pos - slots, S)   # absolute positions
@@ -152,5 +155,8 @@ def gqa_decode(
         valid &= jnp.where(w > 0, (cur_pos - kpos[None, :]) < w, True)
     s = jnp.where(valid[:, None, None, :], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    # probabilities drop to the cache dtype (flash-style) so the PV
+    # contraction also runs without an f32 copy of V; accumulation stays f32
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
     return o.reshape(B, 1, H, hd).astype(q.dtype)

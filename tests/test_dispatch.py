@@ -611,3 +611,50 @@ def test_dispatch_miss_enqueues_background_campaign(tmp_path):
             np.asarray(svc.call("toy_scale", x)), x * max(_TOY_SEQ))
     finally:
         tuner.shutdown()
+
+
+def test_fast_hit_takes_lock_once():
+    """The dispatch fast path (recent resolution, warm executable) must cost
+    exactly one lock acquisition — read, exec lookup, and stat bump share a
+    single critical section."""
+    import threading
+
+    svc = DispatchService()
+    x = np.arange(4.0)
+    svc.dispatch("toy_scale", x)  # populate the fast map + executable cache
+
+    class CountingLock:
+        def __init__(self, inner):
+            self._inner = inner
+            self.acquisitions = 0
+
+        def __enter__(self):
+            self.acquisitions += 1
+            return self._inner.__enter__()
+
+        def __exit__(self, *exc):
+            return self._inner.__exit__(*exc)
+
+    counting = CountingLock(threading.RLock())
+    svc._lock = counting
+    hits_before = svc.stats["exec_hit"]
+    svc.dispatch("toy_scale", x)
+    assert svc.stats["exec_hit"] == hits_before + 1
+    assert counting.acquisitions == 1
+
+
+def test_optimizer_overhead_telemetry_flows_to_tuner(tmp_path):
+    """Campaign.timings (ask/tell/wait seconds) aggregate into
+    BackgroundTuner.stats — the CATBench-style first-class overhead metric."""
+    store = TuningStore(str(tmp_path / "s"))
+    tuner = BackgroundTuner(store, max_workers=1, max_evals=5, n_initial=2)
+    svc = DispatchService(store, tuner=tuner)
+    try:
+        svc.dispatch("toy_scale", np.arange(4.0))
+        tuner.drain()
+        assert tuner.errors == []
+        assert tuner.stats["campaigns"] == 1
+        assert tuner.stats["ask_sec"] > 0.0
+        assert tuner.stats["tell_sec"] > 0.0
+    finally:
+        tuner.shutdown()
