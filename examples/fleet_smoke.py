@@ -1,0 +1,66 @@
+"""Fleet smoke: two hosts share one tuning campaign through repro.fleet.
+
+Host A autotunes syr2k (the paper's BO loop, host-timed) and publishes the
+winner into its TuningStore; a `repro-fleet sync` through a shared-directory
+transport replicates it; host B's DispatchService then resolves the tuned
+config for the exact runtime signature with **zero local evaluations** —
+the cross-host warm-start story of the ROADMAP's top open item, end to end
+through the real CLIs.
+
+    PYTHONPATH=src python examples/fleet_smoke.py [--evals 8] [--root DIR]
+"""
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evals", type=int, default=8)
+    ap.add_argument("--root", default=None,
+                    help="working dir (default: a fresh tempdir)")
+    args = ap.parse_args()
+    root = args.root or tempfile.mkdtemp(prefix="repro-fleet-")
+    store_a = os.path.join(root, "hostA", "store")
+    store_b = os.path.join(root, "hostB", "store")
+    shared = "file:" + os.path.join(root, "shared")
+
+    from repro.dispatch import DispatchService, TuningStore
+    from repro.kernels import ref as R
+    from repro.launch.autotune import main as autotune_main
+    from repro.launch.fleet import main as fleet_main
+
+    print(f"== host A: tuning syr2k ({args.evals} evals) into {store_a}")
+    autotune_main(["--kernel", "syr2k", "--max-evals", str(args.evals),
+                   "--db", os.path.join(root, "hostA", "campaign"),
+                   "--store", store_a])
+
+    print("== host A: repro-fleet sync (push the tuned config)")
+    assert fleet_main(["sync", "--store", store_a, "--transport", shared]) == 0
+    print("== host B: repro-fleet sync (pull it)")
+    assert fleet_main(["sync", "--store", store_b, "--transport", shared]) == 0
+
+    print("== host B: dispatch() must resolve A's config with zero evals")
+    svc = DispatchService(TuningStore(store_b))     # no tuner: nothing to eval
+    C, A, B = R.init_syr2k(240, 200)
+    out = np.asarray(svc.dispatch("syr2k", C, A, B)(C, A, B))
+    assert svc.stats["store_exact"] == 1, svc.stats
+    assert svc.stats["bg_enqueued"] == 0
+    rec = TuningStore(store_b).get("syr2k", R.problem_signature("syr2k", 240, 200),
+                                   "host")
+    assert rec is not None and rec.source.startswith("cli:"), rec
+    np.testing.assert_allclose(
+        out, np.asarray(R.syr2k_ref(C, A, B)), rtol=1e-4, atol=1e-4)
+    print(json.dumps({"host_b_resolved": rec.config,
+                      "objective_sec": rec.objective,
+                      "stats": svc.stats}, indent=2))
+    print("fleet smoke OK: host B serves host A's tuned config, zero evals")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,9 +13,9 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any
+from typing import Any, Iterator
 
-__all__ = ["repair_torn_tail", "append_jsonl"]
+__all__ = ["repair_torn_tail", "append_jsonl", "iter_jsonl_tail"]
 
 
 def repair_torn_tail(path: str) -> bool:
@@ -40,3 +40,32 @@ def append_jsonl(path: str, obj: Any, fsync: bool = False) -> int:
         if fsync:
             os.fsync(f.fileno())
     return len(line.encode())
+
+
+def iter_jsonl_tail(path: str, offset: int) -> Iterator[tuple[Any, int]]:
+    """Tail complete JSONL lines from byte ``offset``: yields
+    ``(obj, end_offset)`` per line — ``obj`` is None for a blank or
+    unparseable line (its bytes still advance the offset) — and stops
+    *before* a torn final line, so a writer mid-append is retried at the
+    caller's next tail. A missing file yields nothing.
+
+    This is the one incremental-reader loop shared by the tuning store, the
+    fleet oplog, and the fleet file transport; the subtleties (advance by
+    encoded byte length before stripping, never step past a newline-less
+    tail) live here exactly once."""
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        f.seek(offset)
+        for line in f:
+            if not line.endswith("\n"):
+                return
+            offset += len(line.encode())
+            line = line.strip()
+            if not line:
+                yield None, offset
+                continue
+            try:
+                yield json.loads(line), offset
+            except json.JSONDecodeError:
+                yield None, offset

@@ -596,87 +596,21 @@ class _LockstepForest:
         X = self.X
         B, F = feats.shape
         msl = self.msl
-        seg = np.repeat(np.arange(B), sizes)
         Xf = X[rows[:, None], np.repeat(feats, sizes, axis=0)]   # (R, F)
-        R = len(rows)
-        segcol = (seg[:, None] * F + np.arange(F)).ravel()       # C-order
-        vals = Xf.ravel()
-        yrep = np.repeat(yn, F)
-        perm = np.lexsort((vals, segcol))  # stable: group, value, position
-        vs = vals[perm]
-        ysrt = yrep[perm]
-        cs1 = np.cumsum(ysrt)
-        cs2 = np.cumsum(ysrt * ysrt)
-        gsizes = np.repeat(sizes, F)                 # per (node, col) group
-        gstarts = np.concatenate([[0], np.cumsum(gsizes)[:-1]])
-        gends = gstarts + gsizes - 1
-        prev1 = np.where(gstarts > 0, cs1[gstarts - 1], 0.0)
-        prev2 = np.where(gstarts > 0, cs2[gstarts - 1], 0.0)
-        t1g = cs1[gends] - prev1
-        t2g = cs2[gends] - prev2
-        nseg = np.repeat(sizes, F)                   # node size per group
 
         if self.splitter == "random":
-            lo = vs[gstarts].reshape(B, F)
-            hi = vs[gends].reshape(B, F)
-            th_rows = []
-            cand_group = []
-            for b in range(B):
-                nc = np.flatnonzero(lo[b] != hi[b])
-                if len(nc):
-                    # vectorized draw == the reference's sequential scalars
-                    th_rows.append(node_rngs[b].uniform(lo[b, nc], hi[b, nc]))
-                    cand_group.append(b * F + nc)
-            if not cand_group:
-                return [None] * B
-            th = np.concatenate(th_rows)
-            cand_group = np.concatenate(cand_group)
-            # |{x <= t}| per candidate group: boolean reduceat is an exact count
-            t_all = np.zeros(B * F)
-            t_all[cand_group] = th
-            cmp = vs <= np.repeat(t_all, gsizes)
-            nl_all = np.add.reduceat(cmp, gstarts, dtype=np.int64)
-            nl = nl_all[cand_group]
+            cand = self._random_candidates(Xf, yn, sizes, starts, node_rngs)
         else:
-            bm = vs[1:] != vs[:-1]
-            bm[gstarts[1:] - 1] = False              # kill cross-group edges
-            cand_pos = np.nonzero(bm)[0]
-            if len(cand_pos) == 0:
-                return [None] * B
-            cand_group = segcol[perm[cand_pos]]
-            th = (vs[cand_pos + 1] + vs[cand_pos]) / 2.0
-            base = cand_pos + 1 - gstarts[cand_group]
-            nxt = np.empty(len(base), np.int64)
-            nxt[-1] = nseg[cand_group[-1]]
-            same = cand_group[1:] == cand_group[:-1]
-            nxt[:-1] = np.where(same, base[1:], nseg[cand_group[:-1]])
-            # fp midpoints that round onto the upper unique value swallow
-            # that group too, exactly like the reference's ``col <= t`` mask
-            nl = np.where(th == vs[cand_pos + 1], nxt, base)
-            percol = np.bincount(cand_group, minlength=B * F)
-            if percol.max() > 32:  # cap threshold scan per feature
-                keepm = np.ones(len(th), bool)
-                s = 0
-                for g, c in enumerate(percol):
-                    if c > 32:
-                        keepm[s:s + c] = False
-                        keepm[s + _linspace32(int(c))] = True
-                    s += c
-                cand_group, th, nl = cand_group[keepm], th[keepm], nl[keepm]
-                cand_pos = cand_pos[keepm]
+            cand = self._best_candidates(Xf, yn, sizes)
+        if cand is None:
+            return [None] * B
+        cand_b, cand_j, th, nl, s1, s2, t1c, t2c, nall, scale = cand
 
-        nr = nseg[cand_group] - nl
-        s1 = cs1[gstarts[cand_group] + nl - 1] - prev1[cand_group]
-        s2 = cs2[gstarts[cand_group] + nl - 1] - prev2[cand_group]
-        sse = (s2 - s1 * s1 / nl) + ((t2g[cand_group] - s2)
-                                     - (t1g[cand_group] - s1) ** 2
+        nr = nall - nl
+        sse = (s2 - s1 * s1 / nl) + ((t2c - s2)
+                                     - (t1c - s1) ** 2
                                      / np.maximum(nr, 1))
         sse[(nl < msl) | (nr < msl)] = np.inf
-
-        cand_b = cand_group // F
-        cand_j = cand_group - cand_b * F
-        # per-node tolerance band from the node's first tried column
-        scale = np.abs(t2g[::F]) + t1g[::F] ** 2 / sizes + 1.0
         bounds = np.searchsorted(cand_b, np.arange(B + 1))
         out = []
         for b in range(B):
@@ -727,6 +661,121 @@ class _LockstepForest:
                     _, j, t = best
                     out.append((j, t, Xf_b[:, j] <= t))
         return out
+
+    def _best_candidates(self, Xf, yn, sizes):
+        """Candidate arrays for the 'best' splitter: every (node, column)
+        group is sorted and every unique-value boundary scored. Returns
+        ``(cand_b, cand_j, th, nl, s1, s2, t1, t2, n, scale)`` per candidate
+        (node totals broadcast per candidate; ``scale`` per node) or None."""
+        B = len(sizes)
+        F = Xf.shape[1]
+        seg = np.repeat(np.arange(B), sizes)
+        segcol = (seg[:, None] * F + np.arange(F)).ravel()       # C-order
+        vals = Xf.ravel()
+        yrep = np.repeat(yn, F)
+        perm = np.lexsort((vals, segcol))  # stable: group, value, position
+        vs = vals[perm]
+        ysrt = yrep[perm]
+        cs1 = np.cumsum(ysrt)
+        cs2 = np.cumsum(ysrt * ysrt)
+        gsizes = np.repeat(sizes, F)                 # per (node, col) group
+        gstarts = np.concatenate([[0], np.cumsum(gsizes)[:-1]])
+        gends = gstarts + gsizes - 1
+        prev1 = np.where(gstarts > 0, cs1[gstarts - 1], 0.0)
+        prev2 = np.where(gstarts > 0, cs2[gstarts - 1], 0.0)
+        t1g = cs1[gends] - prev1
+        t2g = cs2[gends] - prev2
+        nseg = np.repeat(sizes, F)                   # node size per group
+
+        bm = vs[1:] != vs[:-1]
+        bm[gstarts[1:] - 1] = False              # kill cross-group edges
+        cand_pos = np.nonzero(bm)[0]
+        if len(cand_pos) == 0:
+            return None
+        cand_group = segcol[perm[cand_pos]]
+        th = (vs[cand_pos + 1] + vs[cand_pos]) / 2.0
+        base = cand_pos + 1 - gstarts[cand_group]
+        nxt = np.empty(len(base), np.int64)
+        nxt[-1] = nseg[cand_group[-1]]
+        same = cand_group[1:] == cand_group[:-1]
+        nxt[:-1] = np.where(same, base[1:], nseg[cand_group[:-1]])
+        # fp midpoints that round onto the upper unique value swallow
+        # that group too, exactly like the reference's ``col <= t`` mask
+        nl = np.where(th == vs[cand_pos + 1], nxt, base)
+        percol = np.bincount(cand_group, minlength=B * F)
+        if percol.max() > 32:  # cap threshold scan per feature
+            keepm = np.ones(len(th), bool)
+            s = 0
+            for g, c in enumerate(percol):
+                if c > 32:
+                    keepm[s:s + c] = False
+                    keepm[s + _linspace32(int(c))] = True
+                s += c
+            cand_group, th, nl = cand_group[keepm], th[keepm], nl[keepm]
+
+        s1 = cs1[gstarts[cand_group] + nl - 1] - prev1[cand_group]
+        s2 = cs2[gstarts[cand_group] + nl - 1] - prev2[cand_group]
+        cand_b = cand_group // F
+        cand_j = cand_group - cand_b * F
+        # per-node tolerance band from the node's first tried column
+        scale = np.abs(t2g[::F]) + t1g[::F] ** 2 / sizes + 1.0
+        return (cand_b, cand_j, th, nl, s1, s2,
+                t1g[cand_group], t2g[cand_group], nseg[cand_group], scale)
+
+    def _random_candidates(self, Xf, yn, sizes, starts, node_rngs):
+        """Candidate arrays for the 'random' splitter (ET), with the
+        nonsplittable-column prefilter: a column constant within its node can
+        never split it, yet ET's all-features policy (max_features=1.0)
+        previously dragged every such column through the segmented sort,
+        keeping per-round arrays ~4x wider than RF's. Per-(node, column)
+        min/max — the same values as the sorted first/last elements — screen
+        dead columns out first, so only splittable groups are sorted and
+        scanned. Draw values, draw order, and candidate order are unchanged:
+        the reference draws one uniform per non-constant column in column
+        order, and nonconst detection via min != max is exact."""
+        B = len(sizes)
+        F = Xf.shape[1]
+        lo = np.minimum.reduceat(Xf, starts, axis=0)             # (B, F)
+        hi = np.maximum.reduceat(Xf, starts, axis=0)
+        live = lo != hi
+        th_rows = []
+        for b in range(B):
+            nc = np.flatnonzero(live[b])
+            if len(nc):
+                # vectorized draw == the reference's sequential scalars
+                th_rows.append(node_rngs[b].uniform(lo[b, nc], hi[b, nc]))
+        kept = np.flatnonzero(live.ravel())          # live (node, col) groups
+        if len(kept) == 0:
+            return None
+        th = np.concatenate(th_rows)
+        cand_b = kept // F
+        cand_j = kept - cand_b * F
+        gsz = sizes[cand_b]
+        gstarts = np.concatenate([[0], np.cumsum(gsz)[:-1]])
+        gends = gstarts + gsz - 1
+        srow = np.repeat(starts[cand_b], gsz) + \
+            (np.arange(int(gsz.sum())) - np.repeat(gstarts, gsz))
+        vals = Xf[srow, np.repeat(cand_j, gsz)]
+        seg = np.repeat(np.arange(len(kept)), gsz)
+        perm = np.lexsort((vals, seg))  # stable: group, value, position
+        vs = vals[perm]
+        ysrt = yn[srow][perm]
+        cs1 = np.cumsum(ysrt)
+        cs2 = np.cumsum(ysrt * ysrt)
+        prev1 = np.where(gstarts > 0, cs1[gstarts - 1], 0.0)
+        prev2 = np.where(gstarts > 0, cs2[gstarts - 1], 0.0)
+        # |{x <= t}| per group: boolean reduceat is an exact count
+        nl = np.add.reduceat(vs <= np.repeat(th, gsz), gstarts, dtype=np.int64)
+        s1 = cs1[gstarts + nl - 1] - prev1
+        s2 = cs2[gstarts + nl - 1] - prev2
+        t1c = cs1[gends] - prev1
+        t2c = cs2[gends] - prev2
+        # per-node tolerance scale over the node's own rows (ranking-only,
+        # like the sse values: the rescore band absorbs summation-order ulps)
+        t1n = np.add.reduceat(yn, starts)
+        t2n = np.add.reduceat(yn * yn, starts)
+        scale = np.abs(t2n) + t1n * t1n / sizes + 1.0
+        return cand_b, cand_j, th, nl, s1, s2, t1c, t2c, gsz, scale
 
 
 # ---------------------------------------------------------------------------

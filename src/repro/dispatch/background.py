@@ -45,8 +45,13 @@ class BackgroundTuner:
         n_initial: int = 4,
         warm_neighbors: int = 3,
         parallel: int = 1,
+        on_publish: Callable[[TuningRecord], None] | None = None,
     ):
         self.store = store
+        # fired after every campaign's store publish (even a rejected
+        # no-improvement one): DispatchService.attach_sync hooks this so the
+        # fleet SyncAgent pushes fresh results without waiting an interval
+        self.on_publish = on_publish
         self.max_evals = max_evals
         self.learner = learner
         self.seed = seed
@@ -127,6 +132,8 @@ class BackgroundTuner:
                 objective=float(result.best.objective),
                 n_evals=len(result.db), source="background")
             self.store.put(rec)
+            if self.on_publish is not None:
+                self.on_publish(rec)
             if on_done is not None:
                 on_done(kernel, signature, backend)
             return rec

@@ -76,6 +76,11 @@ def warm_start_material(
     from repro.core.space import config_key
     from repro.dispatch.signature import signature_distance as _dist
 
+    # fold in records other writers appended since our last read — with
+    # fleet replication (repro.fleet) a neighbor may have been tuned on a
+    # different host and synced in moments ago; campaigns should warm-start
+    # from the whole fleet's material, not this process's stale view
+    store.refresh()
     ranked = sorted(
         store.records(kernel=kernel, backend=backend),
         key=lambda r: _dist(signature, r.signature))

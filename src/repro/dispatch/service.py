@@ -70,8 +70,9 @@ class DispatchService:
         self.stats = {
             "store_exact": 0, "store_near": 0, "store_default": 0,
             "exec_hit": 0, "exec_miss": 0, "bg_enqueued": 0, "build_failed": 0,
-            "serve_rebuilt": 0,
+            "serve_rebuilt": 0, "sync_applied": 0, "sync_published": 0,
         }
+        self._sync = None  # repro.fleet.SyncAgent, via attach_sync()
         self._exec: dict[tuple, Callable] = {}
         # jit_cached sources + stable per-name proxies: invalidate() drops the
         # compiled entry, and the proxy (which callers hold) lazily re-jits
@@ -198,6 +199,34 @@ class DispatchService:
 
     def _on_tuned(self, kernel: str, signature, backend: str) -> None:
         self.invalidate(kernel, signature)
+        if self._sync is not None:
+            # a background campaign just published: push the new config
+            # fleet-wide now instead of waiting a full anti-entropy interval
+            self._sync.nudge()
+
+    # -- fleet replication (repro.fleet) -----------------------------------------
+
+    def attach_sync(self, agent) -> None:
+        """Bind a :class:`repro.fleet.SyncAgent`: replication counters land
+        in ``stats`` (``sync_applied`` / ``sync_published``), replication lag
+        shows up in :meth:`telemetry`, and local background-tuning publishes
+        nudge the agent to push promptly."""
+        self._sync = agent
+        if self.tuner is not None and getattr(self.tuner, "on_publish", None) is None:
+            self.tuner.on_publish = lambda rec: agent.nudge()
+
+    def telemetry(self) -> dict:
+        """One merged serving-telemetry view: the dispatch counters, the
+        background tuner's optimizer-overhead aggregates (ask/tell/wait
+        seconds), and the sync agent's replication lag (ops pending,
+        last-sync age) when one is attached."""
+        with self._lock:
+            out = dict(self.stats)
+        if self.tuner is not None and getattr(self.tuner, "stats", None):
+            out.update(self.tuner.stats)
+        if self._sync is not None:
+            out.update(self._sync.lag())
+        return out
 
     # -- cache management --------------------------------------------------------
 

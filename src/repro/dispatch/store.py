@@ -24,6 +24,7 @@ import contextlib
 import dataclasses
 import json
 import os
+import threading
 import time
 from typing import Any, Iterator, Mapping
 
@@ -32,7 +33,7 @@ try:
 except ImportError:  # non-POSIX: single-process best effort
     fcntl = None
 
-from repro.core.jsonl import append_jsonl, repair_torn_tail
+from repro.core.jsonl import append_jsonl, iter_jsonl_tail, repair_torn_tail
 from repro.core.space import config_key
 from repro.dispatch.signature import (
     ShapeSignature,
@@ -111,7 +112,28 @@ class TuningStore:
         self._quarantined_json: dict[tuple, dict] = {}
         self._access: dict[tuple, float] = {}  # in-process LRU clock per key
         self._offset = 0  # bytes of store.jsonl already folded into _best
+        # in-process companion to the flock: refresh() is called bare (no
+        # flock) from dispatch resolution, warm-start ranking, and the fleet
+        # sync thread — two concurrent refreshes of one store object would
+        # otherwise both fold the same lines and double-advance _offset past
+        # EOF, silently skipping every record that lands there later
+        self._tlock = threading.RLock()
+        # repro.fleet op emission: ``sink(kind, record)`` fires for every
+        # accepted put, quarantine, and compaction eviction, WHILE the store
+        # lock is held — op stamp order must match store application order,
+        # or a put/evict pair racing across the lock boundary draws inverted
+        # Lamport stamps and the merge resurrects (or wrongly kills) the
+        # record fleet-wide. Lock order is always store -> fleet, never the
+        # reverse: fleet ingestion releases the oplog locks before touching
+        # the store. Remote ops fold back in through :meth:`apply_remote`,
+        # which never re-emits.
+        self._op_sink = None
         self.refresh()
+
+    def set_op_sink(self, sink) -> None:
+        """Attach (or detach, with ``None``) the replication op sink — see
+        :class:`repro.fleet.Replica`, which forwards ops into the oplog."""
+        self._op_sink = sink
 
     def _canon(self, sig: ShapeSignature) -> ShapeSignature:
         return bucket_signature(sig, self.bucket_base) if self.bucket else sig
@@ -124,44 +146,41 @@ class TuningStore:
     @contextlib.contextmanager
     def _lock(self) -> Iterator[None]:
         lock_path = os.path.join(self.path, "store.lock")
-        f = open(lock_path, "a+")
-        try:
-            if fcntl is not None:
-                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
-            yield
-        finally:
-            if fcntl is not None:
-                fcntl.flock(f.fileno(), fcntl.LOCK_UN)
-            f.close()
+        with self._tlock:  # threads of this process first, then processes
+            f = open(lock_path, "a+")
+            try:
+                if fcntl is not None:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                yield
+            finally:
+                if fcntl is not None:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+                f.close()
 
     # -- read side --------------------------------------------------------------
 
     def refresh(self) -> int:
         """Fold any log lines appended since the last read (by this or any
         other process) into the in-memory best view. Returns #records read."""
-        path = self._log_path()
-        if not os.path.exists(path):
-            return 0
+        with self._tlock:
+            return self._refresh_locked()
+
+    def _refresh_locked(self) -> int:
         n = 0
-        with open(path) as f:
-            f.seek(self._offset)
-            for line in f:
-                if not line.endswith("\n"):
-                    break  # torn tail from a writer mid-append; retry next refresh
-                self._offset += len(line.encode())
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    d = json.loads(line)
-                    rec = TuningRecord.from_json(d)
-                except (json.JSONDecodeError, KeyError, ValueError):
-                    continue
-                if d.get("quarantined"):
-                    self._apply_quarantine(rec, d)
-                else:
-                    self._fold(rec)
-                n += 1
+        for d, self._offset in iter_jsonl_tail(self._log_path(), self._offset):
+            if d is None:
+                continue
+            try:
+                rec = TuningRecord.from_json(d)
+            except (KeyError, ValueError):
+                continue
+            if d.get("quarantined"):
+                self._apply_quarantine(rec, d)
+            elif d.get("evicted"):
+                self._apply_evict(rec)
+            else:
+                self._fold(rec)
+            n += 1
         return n
 
     @staticmethod
@@ -175,6 +194,16 @@ class TuningStore:
         cur = self._best.get(rec.key())
         if cur is not None and config_key(cur.config) == config_key(rec.config):
             del self._best[rec.key()]
+
+    def _apply_evict(self, rec: TuningRecord) -> bool:
+        """A replicated eviction tombstone: drop the key's current best iff
+        it is the tombstoned config (a better config appended later in the
+        log must survive replay — lines are folded in order)."""
+        cur = self._best.get(rec.key())
+        if cur is not None and config_key(cur.config) == config_key(rec.config):
+            del self._best[rec.key()]
+            return True
+        return False
 
     def _fold(self, rec: TuningRecord) -> None:
         if self._qkey(rec) in self._quarantined:
@@ -192,6 +221,21 @@ class TuningStore:
         if rec is not None:
             self._access[key] = time.time()
         return rec
+
+    def peek(self, kernel: str, signature: ShapeSignature, backend: str) -> TuningRecord | None:
+        """Like :meth:`get` but without the LRU touch — replication's
+        reconcile walks every key each cycle, and counting those reads as
+        use would erase the access ordering :meth:`compact` evicts by."""
+        return self._best.get(
+            (kernel, signature_key(self._canon(signature)), backend))
+
+    def is_quarantined(self, rec: TuningRecord) -> bool:
+        """Peek-style: whether this exact (kernel, signature, backend,
+        config) is already banned in this process's view. Reconcile's fast
+        path — re-deriving bans every sync cycle must not pay a flocked
+        log append attempt per historical quarantine."""
+        rec = dataclasses.replace(rec, signature=self._canon(rec.signature))
+        return self._qkey(rec) in self._quarantined
 
     def records(self, kernel: str | None = None, backend: str | None = None) -> list[TuningRecord]:
         return [
@@ -222,6 +266,8 @@ class TuningStore:
                 return False
             self._offset += append_jsonl(self._log_path(), rec.to_json(), fsync=True)
             self._fold(rec)
+            if self._op_sink is not None:
+                self._op_sink("put", rec)
             return True
 
     def quarantine(self, rec: TuningRecord) -> None:
@@ -237,6 +283,56 @@ class TuningStore:
             self.refresh()
             self._offset += append_jsonl(self._log_path(), line, fsync=True)
             self._apply_quarantine(rec, line)
+            if self._op_sink is not None:
+                self._op_sink("quarantine", rec)
+
+    def apply_remote(self, kind: str, rec: TuningRecord) -> bool:
+        """Replication merge hook (see :mod:`repro.fleet`): apply one
+        replicated operation to this store WITHOUT re-emitting it to the op
+        sink — a merged op must never echo back into the log it came from.
+        Returns whether the store changed.
+
+        * ``put`` — accepted only as a strict improvement over the current
+          best (the fleet merge decides replacements by first evicting the
+          dead local record); re-applying the current best is a no-op, so
+          replaying an op stream is idempotent.
+        * ``quarantine`` — same semantics as :meth:`quarantine`.
+        * ``evict`` — drops the key's best iff it is this exact config and
+          persists an ``evicted`` tombstone line so the record does not
+          resurrect when the log is replayed by a fresh process.
+        """
+        rec = dataclasses.replace(rec, signature=self._canon(rec.signature))
+        with self._lock():
+            repair_torn_tail(self._log_path())
+            self.refresh()
+            if kind == "put":
+                if self._qkey(rec) in self._quarantined:
+                    return False
+                cur = self._best.get(rec.key())
+                if cur is not None and rec.objective >= cur.objective:
+                    return False
+                self._offset += append_jsonl(
+                    self._log_path(), rec.to_json(), fsync=True)
+                self._fold(rec)
+                return True
+            if kind == "quarantine":
+                if self._qkey(rec) in self._quarantined:
+                    return False
+                line = rec.to_json()
+                line["quarantined"] = True
+                self._offset += append_jsonl(self._log_path(), line, fsync=True)
+                self._apply_quarantine(rec, line)
+                return True
+            if kind == "evict":
+                cur = self._best.get(rec.key())
+                if cur is None or config_key(cur.config) != config_key(rec.config):
+                    return False
+                line = rec.to_json()
+                line["evicted"] = True
+                self._offset += append_jsonl(self._log_path(), line, fsync=True)
+                del self._best[rec.key()]
+                return True
+            raise ValueError(f"unknown replicated op kind {kind!r}")
 
     def ingest_database(
         self,
@@ -283,7 +379,9 @@ class TuningStore:
           record's ``created`` time for keys never read here).
 
         Quarantine tombstones survive compaction so a poisoned config stays
-        banned across process restarts."""
+        banned across process restarts. Every eviction is reported to the
+        replication op sink (as an ``evict`` tombstone op) so a compacted
+        record does not resurrect from a peer on the next fleet pull."""
         with self._lock():
             self.refresh()
             now = time.time()
@@ -309,7 +407,18 @@ class TuningStore:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self._log_path())
+            evicted = [r for k, r in self._best.items() if k not in survivors]
             self._best = survivors
             self._access = {k: t for k, t in self._access.items() if k in survivors}
             self._offset = os.path.getsize(self._log_path())
+            # evict ops are stamped while the store lock is still held:
+            # eviction is the one op whose merge semantics are stamp-ordered
+            # against puts ("a put dies iff stamp <= the newest evict
+            # stamp"), so a concurrent put accepted after this compaction
+            # must also be stamped after it — emitting outside the lock
+            # would let that fresh result draw the older stamp and be
+            # killed fleet-wide by our tombstone
+            if self._op_sink is not None:
+                for r in evicted:
+                    self._op_sink("evict", r)
             return len(self._best)

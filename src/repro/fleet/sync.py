@@ -1,0 +1,244 @@
+"""Replica binding + the anti-entropy SyncAgent.
+
+:class:`Replica` ties one :class:`~repro.dispatch.store.TuningStore` to its
+:class:`~repro.fleet.oplog.OpLog`: local store mutations emit ops (stamped
+while the store lock is held, so op order matches application order — lock
+order is always store → fleet, and ingestion releases the oplog locks
+before touching the store), replicated ops fold back into the store through the
+deterministic merge, and an attached
+:class:`~repro.dispatch.service.DispatchService` gets its compiled
+executables invalidated whenever replication changes what the store serves
+— a better config tuned anywhere in the fleet hot-swaps in here.
+
+:class:`SyncAgent` is the anti-entropy daemon (a thread, like
+:class:`~repro.dispatch.background.BackgroundTuner`): every
+``interval_sec`` — or immediately after :meth:`~SyncAgent.nudge`, which the
+dispatch service fires when a background campaign publishes — it pulls
+remote deltas, merges them, and pushes local ones. Transport failures
+(peer down, shared dir unmounted) are counted, never raised: serving
+continues on local state and the next cycle retries.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Iterable
+
+from repro.dispatch.signature import parse_signature_key
+from repro.dispatch.store import TuningStore
+from repro.fleet.oplog import Op, OpLog
+from repro.fleet.transport import Transport
+
+__all__ = ["Replica", "SyncAgent"]
+
+
+class Replica:
+    def __init__(
+        self,
+        store: TuningStore,
+        *,
+        oplog: OpLog | None = None,
+        service=None,
+    ):
+        self.store = store
+        self.oplog = oplog or OpLog(os.path.join(store.path, "fleet"))
+        self.service = service
+        store.set_op_sink(self.oplog.emit)
+        # records that predate fleet attachment still need ops, or peers
+        # would never learn this host's previously tuned configs
+        for rec in store.records():
+            self.oplog.ensure_put(rec)
+        # ...and an oplog that predates this store view (restart, wiped
+        # store dir, crash between durable ingest and store application)
+        # folds its merged winners and bans straight back in
+        self.reconcile(self.oplog.merge_keys())
+
+    @property
+    def host_id(self) -> str:
+        return self.oplog.host_id
+
+    # -- merge application -------------------------------------------------------
+
+    def ingest(self, ops: Iterable[Op]) -> int:
+        """Fold replicated ops into the oplog, then reconcile the store
+        against the merge. Returns the number of store-visible changes.
+
+        Reconciliation deliberately covers *every* merge-state key, not just
+        the freshly ingested ones: locally-originated ops (a quarantine, a
+        compaction eviction) can flip a key's merge winner to a put that
+        only ever existed in the oplog, and the next cycle must fold that
+        winner into the store even when the transport delivered nothing."""
+        self.oplog.ingest(ops)
+        return self.reconcile(self.oplog.merge_keys())
+
+    def reconcile(self, keys: Iterable[tuple]) -> int:
+        """Drive the store to the merge state for ``keys``: apply the
+        merge's quarantines, evict local bests that are dead in the merge,
+        and put merge winners that beat (or replace) the local record.
+        Every change invalidates the attached service's executables for
+        that signature so the next dispatch serves the fleet's best.
+
+        Quarantines are re-derived from the merge state (not from freshly
+        delivered ops): version-vector dedup means a quarantine op is
+        delivered exactly once, so a crash between its durable oplog append
+        and the store application must not lose the ban — replaying
+        reconciliation heals it."""
+        changed = 0
+        for key in keys:
+            kernel, sig_key, backend = key
+            sig = parse_signature_key(sig_key)
+            for qop in self.oplog.key_quarantines(key):
+                if self.store.is_quarantined(qop.record):
+                    continue  # cheap in-memory check before the flocked apply
+                if self.store.apply_remote("quarantine", qop.record):
+                    changed += 1
+                    self._invalidate(qop.record)
+            win = self.oplog.winner(key)
+            cur = self.store.peek(kernel, sig, backend)
+            if win is None:
+                # every put for this key is tombstoned or quarantined
+                if cur is not None and self.store.apply_remote("evict", cur):
+                    changed += 1
+                    self._invalidate(cur)
+                continue
+            wrec = win.record
+            if cur is not None and wrec.objective >= cur.objective \
+                    and (cur.config != wrec.config
+                         or wrec.objective > cur.objective):
+                # the local record lost the merge without being beaten on
+                # objective — its op was evicted/quarantined fleet-wide (the
+                # same config may even have been legitimately re-tuned to a
+                # slower, newer measurement), or it tied and the stamp order
+                # picked the other config; evict it so the winner lands
+                if self.store.apply_remote("evict", cur):
+                    cur = None
+            if (cur is None or wrec.objective < cur.objective) \
+                    and self.store.apply_remote("put", wrec):
+                changed += 1
+                self._invalidate(wrec)
+        if changed and self.service is not None:
+            with self.service._lock:
+                self.service.stats["sync_applied"] += changed
+        return changed
+
+    def _invalidate(self, rec) -> None:
+        if self.service is not None:
+            self.service.invalidate(rec.kernel, rec.signature)
+
+    # -- telemetry ---------------------------------------------------------------
+
+    def status(self, transport: Transport | None = None) -> dict:
+        self.store.refresh()
+        self.oplog.refresh()
+        last = self.oplog.last_sync()
+        out = {
+            "host": self.host_id,
+            "records": len(self.store),
+            "ops": len(self.oplog),
+            "clock": self.oplog._clock,
+            "version_vector": self.oplog.version_vector(),
+            "last_sync_age_sec": (
+                round(time.time() - last["time"], 3) if last else None),
+            "last_sync": last,
+        }
+        if transport is not None:
+            out["transport"] = transport.describe()
+            out["ops_pending"] = transport.pending(self.oplog)
+        return out
+
+
+class SyncAgent:
+    """Periodic push/pull of op deltas between this replica and its
+    transport; see module docstring."""
+
+    def __init__(
+        self,
+        replica: Replica,
+        transport: Transport,
+        *,
+        interval_sec: float = 30.0,
+        max_errors: int = 20,
+    ):
+        self.replica = replica
+        self.transport = transport
+        self.interval_sec = interval_sec
+        self.stats = {"cycles": 0, "sync_applied": 0, "sync_published": 0,
+                      "sync_errors": 0, "ops_pending": 0, "last_sync": 0.0}
+        self.errors: list[BaseException] = []
+        self._max_errors = max_errors
+        self._wake = threading.Event()
+        self._stopping = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        if replica.service is not None:
+            replica.service.attach_sync(self)
+
+    # -- one anti-entropy cycle --------------------------------------------------
+
+    def sync_once(self) -> dict:
+        applied = published = pending = 0
+        try:
+            pulled = self.transport.pull(self.replica.oplog)
+            applied = self.replica.ingest(pulled)
+            published = self.transport.push(self.replica.oplog)
+            pending = self.transport.pending(self.replica.oplog)
+            self.replica.oplog.note_sync(
+                applied=applied, published=published, pending=pending)
+        except Exception as e:  # noqa: BLE001 — anti-entropy must outlive peers
+            with self._lock:
+                self.stats["sync_errors"] += 1
+                self.errors.append(e)
+                del self.errors[:-self._max_errors]
+            return {"applied": applied, "published": published,
+                    "pending": pending, "error": repr(e)}
+        with self._lock:
+            self.stats["cycles"] += 1
+            self.stats["sync_applied"] += applied
+            self.stats["sync_published"] += published
+            self.stats["ops_pending"] = pending
+            self.stats["last_sync"] = time.time()
+        svc = self.replica.service
+        if svc is not None and published:
+            with svc._lock:
+                svc.stats["sync_published"] += published
+        return {"applied": applied, "published": published, "pending": pending}
+
+    def lag(self) -> dict:
+        """Replication-lag view merged into ``DispatchService.telemetry()``."""
+        with self._lock:
+            last = self.stats["last_sync"]
+            return {
+                "sync_ops_pending": self.stats["ops_pending"],
+                "sync_last_age_sec": (
+                    round(time.time() - last, 3) if last else float("inf")),
+                "sync_errors": self.stats["sync_errors"],
+            }
+
+    # -- lifecycle ---------------------------------------------------------------
+
+    def nudge(self) -> None:
+        """Wake the loop now (e.g. a background campaign just published a
+        better config — push it fleet-wide without waiting a full interval)."""
+        self._wake.set()
+
+    def start(self) -> "SyncAgent":
+        if self._thread is None or not self._thread.is_alive():
+            self._stopping.clear()
+            self._thread = threading.Thread(
+                target=self._run, name="repro-fleet-sync", daemon=True)
+            self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stopping.is_set():
+            self.sync_once()
+            self._wake.wait(self.interval_sec)
+            self._wake.clear()
+
+    def stop(self, wait: bool = True) -> None:
+        self._stopping.set()
+        self._wake.set()
+        if wait and self._thread is not None:
+            self._thread.join(timeout=30)
