@@ -20,7 +20,12 @@ to change the campaign length (default 30; paper used 200).
 
 from __future__ import annotations
 
+import datetime
+import json
 import os
+import platform
+import socket
+import subprocess
 import time
 
 import jax
@@ -33,6 +38,38 @@ from repro.core.space import ConfigurationSpace
 EVALS = int(os.environ.get("REPRO_BENCH_EVALS", "30"))
 SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
 LEARNER = os.environ.get("REPRO_BENCH_LEARNER", "RF")
+
+
+def bench_meta() -> dict:
+    """Provenance stamp shared by every ``BENCH_*.json`` artifact: which
+    host/commit produced the numbers and when — so two artifacts are
+    comparable (or visibly not) without archaeology."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:  # noqa: BLE001 — no git is fine (tarball checkout)
+        sha = None
+    return {
+        "host": socket.gethostname(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
+def write_bench_json(path: str, payload: dict) -> dict:
+    """Stamp ``payload`` with :func:`bench_meta` and write it as JSON;
+    returns the stamped dict."""
+    out = {"meta": bench_meta(), **payload}
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    return out
 
 
 def time_callable(fn, args, repeats: int = 3, warmup: int = 1) -> float:

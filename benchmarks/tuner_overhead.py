@@ -7,8 +7,11 @@ dominate the tuning loop once the evaluations themselves are cheap (cost
 backend) or run concurrently (``--parallel N``). This benchmark times the
 ``ask`` / ``tell`` hot path of :class:`repro.core.search.BayesianSearch` at
 n ∈ {50, 100, 200} observations for all four learners and writes
-``BENCH_tuner_overhead.json``, so the speedup from vectorizing the surrogate
-stack is a tracked number rather than a claim.
+``BENCH_tuner_overhead.json`` (stamped with host/git-sha/timestamp via
+``benchmarks.common.bench_meta``) plus ``BENCH_tuner_overhead.obs.jsonl``, an
+``repro.obs`` metrics snapshot with ``bench_{ask,tell,ask_batch}_seconds``
+histograms labeled per learner — so the speedup from vectorizing the
+surrogate stack is a tracked number rather than a claim.
 
 Usage::
 
@@ -25,17 +28,21 @@ regression tripwire.
 from __future__ import annotations
 
 import argparse
-import json
-import platform
+import os
 import statistics
 import sys
 import time
 
 import numpy as np
 
-from repro.core.plopper import EvalResult
-from repro.core.search import BayesianSearch
-from repro.core.space import Categorical, ConfigurationSpace, Ordinal
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import bench_meta, write_bench_json  # noqa: E402
+from repro.core.plopper import EvalResult  # noqa: E402
+from repro.core.search import BayesianSearch  # noqa: E402
+from repro.core.space import Categorical, ConfigurationSpace, Ordinal  # noqa: E402
+from repro.obs.export import write_snapshot  # noqa: E402
+from repro.obs.metrics import MetricsRegistry, summarize_histograms  # noqa: E402
 
 TILES = (4, 8, 16, 20, 32, 64, 96, 100, 128, 256, 2048)  # the paper's 11-entry list
 
@@ -78,8 +85,10 @@ def seeded_search(learner: str, n_obs: int, seed: int = 1234) -> BayesianSearch:
 
 
 def time_learner(learner: str, n_obs: int, repeats: int, batch: int,
-                 seed: int = 1234) -> dict:
+                 seed: int = 1234, registry: MetricsRegistry | None = None) -> dict:
     search = seeded_search(learner, n_obs, seed)
+    registry = registry if registry is not None else MetricsRegistry()
+    labels = {"learner": learner, "n_obs": n_obs}
 
     # the real loop shape: every ask is followed by a tell, so each fit sees
     # freshly-grown training data (no artificial repeat-ask memoization)
@@ -88,9 +97,11 @@ def time_learner(learner: str, n_obs: int, repeats: int, batch: int,
         t0 = time.perf_counter()
         cfg = search.ask()
         ask_times.append(time.perf_counter() - t0)
+        registry.observe("bench_ask_seconds", ask_times[-1], **labels)
         t0 = time.perf_counter()
         search.tell(cfg, EvalResult(objective(cfg), True, {}))
         tell_times.append(time.perf_counter() - t0)
+        registry.observe("bench_tell_seconds", tell_times[-1], **labels)
 
     # batched ask: n proposals through one pooled candidate set + liar refits
     batch_times = []
@@ -98,6 +109,8 @@ def time_learner(learner: str, n_obs: int, repeats: int, batch: int,
         t0 = time.perf_counter()
         cfgs = search.ask(batch)
         batch_times.append(time.perf_counter() - t0)
+        registry.observe("bench_ask_batch_seconds", batch_times[-1],
+                         batch=batch, **labels)
         for cfg in cfgs:
             search.tell(cfg, EvalResult(objective(cfg), True, {}))
 
@@ -111,24 +124,31 @@ def time_learner(learner: str, n_obs: int, repeats: int, batch: int,
 
 
 def run(learners, sizes, repeats, batch, out, seed=1234):
+    # every ask/tell lands in one registry as bench_{ask,tell,ask_batch}_seconds
+    # histograms labeled (learner, n_obs) — the same snapshot format the rest
+    # of the obs stack speaks, so a dashboard ingesting dispatch snapshots
+    # can ingest benchmark runs unchanged
+    registry = MetricsRegistry()
     results: dict = {
         "space_cardinality": make_space().cardinality(),
         "sizes": list(sizes),
-        "python": platform.python_version(),
-        "machine": platform.machine(),
         "learners": {},
     }
     for learner in learners:
         per_n = {}
         for n_obs in sizes:
-            per_n[str(n_obs)] = time_learner(learner, n_obs, repeats, batch, seed)
+            per_n[str(n_obs)] = time_learner(learner, n_obs, repeats, batch,
+                                             seed, registry=registry)
             print(f"[{learner}] n={n_obs}: ask={per_n[str(n_obs)]['ask_sec'] * 1e3:.2f}ms "
                   f"ask(batch{batch})={per_n[str(n_obs)][f'ask_batch{batch}_sec'] * 1e3:.2f}ms "
                   f"tell={per_n[str(n_obs)]['tell_sec'] * 1e6:.1f}us", flush=True)
         results["learners"][learner] = per_n
-    with open(out, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
-    print(f"wrote {out}")
+    snapshot = registry.snapshot()
+    results["obs"] = summarize_histograms(snapshot)
+    write_bench_json(out, results)
+    obs_out = os.path.splitext(out)[0] + ".obs.jsonl"
+    write_snapshot(obs_out, registry=registry, bench="tuner_overhead")
+    print(f"wrote {out} and {obs_out}")
     return results
 
 

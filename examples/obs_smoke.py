@@ -1,0 +1,104 @@
+"""Observability smoke: one traced tune → serve → scrape pipeline.
+
+A syr2k campaign runs with tracing enabled (campaign ask/evaluate/tell and
+database checkpoint spans land in one Chrome-trace JSONL), the tuned store
+then serves dispatches whose execute latencies fill the per-signature
+histogram, and the pipeline is asserted end to end: ``telemetry()`` reports
+p50/p99 for the tuned signature, an :class:`ObsServer` scrape exposes the
+same histogram as Prometheus text, the trace validates with every expected
+span present, and the Perfetto export is loadable JSON.
+
+    PYTHONPATH=src python examples/obs_smoke.py [--evals 8] [--root DIR]
+"""
+
+import argparse
+import json
+import os
+import tempfile
+import urllib.request
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evals", type=int, default=8)
+    ap.add_argument("--root", default=None,
+                    help="working dir (default: a fresh tempdir)")
+    args = ap.parse_args()
+    root = args.root or tempfile.mkdtemp(prefix="repro-obs-")
+    store_path = os.path.join(root, "store")
+    trace_path = os.path.join(root, "trace.jsonl")
+    metrics_path = os.path.join(root, "metrics.jsonl")
+    perfetto_path = os.path.join(root, "trace.perfetto.json")
+
+    from repro.dispatch import DispatchService, TuningStore
+    from repro.kernels import ref as R
+    from repro.launch.autotune import main as autotune_main
+    from repro.obs.export import ObsServer, write_snapshot
+    from repro.obs.metrics import get_registry, summarize_histograms
+    from repro.obs.trace import configure_tracer, export_chrome_trace, validate_trace
+
+    configure_tracer(trace_path, process_name="obs-smoke")
+
+    print(f"== traced syr2k campaign ({args.evals} evals) into {store_path}")
+    autotune_main(["--kernel", "syr2k", "--max-evals", str(args.evals),
+                   "--db", os.path.join(root, "campaign"),
+                   "--store", store_path])
+
+    print("== serving the tuned store; execute latencies -> histogram")
+    svc = DispatchService(TuningStore(store_path))
+    C, A, B = R.init_syr2k(240, 200)
+    fn = svc.dispatch("syr2k", C, A, B)
+    for _ in range(5):
+        fn(C, A, B)
+    tel = svc.telemetry()
+    assert svc.stats["store_exact"] == 1, svc.stats
+    rows = [r for r in tel["execute_latency"] if r["kernel"] == "syr2k"]
+    assert len(rows) == 1, tel["execute_latency"]
+    row = rows[0]
+    assert row["count"] == 5, row
+    assert 0 < row["p50_sec"] <= row["p99_sec"], row
+
+    print("== /metrics scrape must expose the same histogram")
+    server = ObsServer(registry=svc.metrics).start()
+    try:
+        with urllib.request.urlopen(server.url + "/metrics") as r:
+            text = r.read().decode()
+    finally:
+        server.stop()
+    assert "repro_dispatch_execute_seconds_count" in text, text[:2000]
+    assert 'kernel="syr2k"' in text
+    assert f'signature="{row["signature"]}"' in text
+
+    write_snapshot(metrics_path, registry=get_registry(), source="obs-smoke")
+    configure_tracer(None)
+
+    print("== trace must validate with the full span set")
+    report = validate_trace(trace_path)
+    assert report["ok"], report
+    required = {"campaign.ask", "campaign.evaluate", "campaign.tell",
+                "db.checkpoint", "dispatch.lookup"}
+    missing = required - set(report["names"])
+    assert not missing, f"missing spans: {sorted(missing)}"
+
+    n_events = export_chrome_trace(trace_path, perfetto_path)
+    loaded = json.load(open(perfetto_path))
+    assert len(loaded["traceEvents"]) == n_events > 0
+
+    print(json.dumps({
+        "trace_events": report["events"],
+        "span_names": report["names"],
+        "execute_latency": row,
+        "campaign_overhead": summarize_histograms(
+            get_registry().snapshot(), prefix="campaign_"),
+        "artifacts": {"trace": trace_path, "metrics": metrics_path,
+                      "perfetto": perfetto_path},
+    }, indent=2, default=str))
+    print("obs smoke OK: traced campaign, per-signature p50/p99, "
+          "Prometheus scrape, Perfetto export")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -110,8 +110,13 @@ class PerformanceDatabase:
         if key not in self._seen:  # first occurrence wins lookup
             self._seen[key] = rec.index
         if self.path:
-            self._append_csv(rec)
-            self._append_jsonl(rec)
+            # deferred import: obs sits above core in the layering, and the
+            # span is only worth paying for on the persistent path
+            from repro.obs.trace import span as obs_span
+
+            with obs_span("db.checkpoint", index=rec.index):
+                self._append_csv(rec)
+                self._append_jsonl(rec)
         return rec
 
     # -- analysis (findMin.py role lives in findmin.py, built on these) ----------

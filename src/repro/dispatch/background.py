@@ -29,6 +29,8 @@ from repro.dispatch.lookup import warm_start_material
 from repro.dispatch.signature import ShapeSignature, signature_key
 from repro.dispatch.store import TuningRecord, TuningStore
 from repro.engine import Campaign
+from repro.obs.metrics import get_registry
+from repro.obs.trace import span as obs_span
 
 __all__ = ["BackgroundTuner"]
 
@@ -113,12 +115,20 @@ class BackgroundTuner:
 
     def _campaign(self, key, kernel, signature, backend, space, evaluator,
                   max_evals, on_done) -> TuningRecord | None:
+        sig_key = signature_key(signature)
+        registry = get_registry()
         try:
-            warm_cfgs, warm_recs = self._warm_start(kernel, signature, backend)
-            result = Campaign(
-                space, evaluator, max_evals=max_evals, learner=self.learner,
-                seed=self.seed, n_initial=self.n_initial, parallel=self.parallel,
-                warm_start=warm_cfgs, warm_start_records=warm_recs).run()
+            t0 = time.perf_counter()
+            with obs_span("tuner.campaign", kernel=kernel, signature=sig_key,
+                          backend=backend, max_evals=max_evals):
+                warm_cfgs, warm_recs = self._warm_start(kernel, signature, backend)
+                result = Campaign(
+                    space, evaluator, max_evals=max_evals, learner=self.learner,
+                    seed=self.seed, n_initial=self.n_initial, parallel=self.parallel,
+                    warm_start=warm_cfgs, warm_start_records=warm_recs).run()
+            registry.add("tuner_campaigns_total", kernel=kernel)
+            registry.observe("tuner_campaign_seconds",
+                             time.perf_counter() - t0, kernel=kernel)
             if result.timings:
                 with self._lock:
                     self.stats["campaigns"] += 1
@@ -131,7 +141,9 @@ class BackgroundTuner:
                 config=dict(result.best.config),
                 objective=float(result.best.objective),
                 n_evals=len(result.db), source="background")
-            self.store.put(rec)
+            with obs_span("tuner.publish", kernel=kernel, signature=sig_key):
+                self.store.put(rec)
+            registry.add("tuner_publish_total", kernel=kernel)
             if self.on_publish is not None:
                 self.on_publish(rec)
             if on_done is not None:

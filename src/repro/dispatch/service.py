@@ -37,6 +37,8 @@ from repro.dispatch.lookup import Resolution, resolve
 from repro.dispatch.registry import get as get_variant
 from repro.dispatch.signature import shape_signature, signature_key
 from repro.dispatch.store import TuningStore
+from repro.obs.metrics import get_registry, summarize_histograms
+from repro.obs.trace import get_tracer
 
 __all__ = ["DispatchService", "dispatch", "call", "get_service", "configure"]
 
@@ -54,8 +56,13 @@ class DispatchService:
         jit: bool = True,
         resolve_ttl_sec: float = 30.0,
         fast_sweep_size: int = 256,
+        metrics=None,
     ):
         self.store = store
+        # repro.obs registry: per-signature execute-latency histograms and
+        # request counters. Recording is shard-local (lock-free), so the
+        # fast-hit path's one-lock contract holds with metrics enabled.
+        self.metrics = metrics if metrics is not None else get_registry()
         self.backend = backend
         self.target = target
         self.distance_threshold = distance_threshold
@@ -120,10 +127,12 @@ class DispatchService:
         spec = get_variant(kernel)
         sig = shape_signature(list(args) + [v for _, v in sorted(static_kw.items())])
         static_id = tuple(sorted(static_kw.items()))
-        fast_key = (kernel, signature_key(sig), static_id)
+        sig_key = signature_key(sig)
+        fast_key = (kernel, sig_key, static_id)
         now = time.monotonic()
         # hot path: ONE lock acquisition — fast-map read, executable lookup,
-        # and the hit-stat bump share a single critical section
+        # and the hit-stat bump share a single critical section (the metric
+        # bump is shard-local and takes no lock)
         with self._lock:
             entry = self._fast.get(fast_key)
             if entry is not None:
@@ -131,12 +140,21 @@ class DispatchService:
                 fn = self._exec.get(exec_key)
                 if fn is not None and now < expires:
                     self.stats["exec_hit"] += 1
+                    self.metrics.add("dispatch_requests_total",
+                                     kernel=kernel, path="fast_hit")
                     return fn
                 del self._fast[fast_key]  # expired or orphaned: don't leak
         # miss path: resolve outside the lock (store refresh does file I/O),
         # then fold the resolve stat and the executable-cache probe into one
         # critical section
-        config, res, resolve_stat = self._resolve_nostats(kernel, sig)
+        tracer = get_tracer()
+        t0 = time.perf_counter()
+        with tracer.span("dispatch.lookup", kernel=kernel, signature=sig_key):
+            config, res, resolve_stat = self._resolve_nostats(kernel, sig)
+        self.metrics.observe("dispatch_lookup_seconds",
+                             time.perf_counter() - t0, kernel=kernel)
+        self.metrics.add("dispatch_requests_total", kernel=kernel,
+                         path=resolve_stat)
         key = fast_key + (config_key(config),)
         with self._lock:
             self.stats[resolve_stat] += 1
@@ -148,26 +166,38 @@ class DispatchService:
             # validate build + abstract trace now, so a poisoned record
             # degrades to the default config instead of raising at the caller
             try:
-                built = spec.builder(config, **static_kw)
-                if args:
-                    jax.eval_shape(built, *args)
+                with tracer.span("dispatch.build", kernel=kernel,
+                                 signature=sig_key):
+                    built = spec.builder(config, **static_kw)
+                    if args:
+                        jax.eval_shape(built, *args)
             except Exception:
                 # only an exact hit proves the record is bad for its own
                 # signature; a nearest neighbor may merely not transfer to
                 # this shape (e.g. an indivisible block), and quarantining it
                 # would destroy a config that is valid where it was tuned
                 if self.store is not None and res.exact:
-                    self.store.quarantine(res.record)
+                    with tracer.span("dispatch.quarantine", kernel=kernel,
+                                     signature=sig_key):
+                        self.store.quarantine(res.record)
                 built, res = None, None
                 config = spec.default_config(self.target)
                 key = fast_key + (config_key(config),)
                 with self._lock:
                     self.stats["build_failed"] += 1
                     fn = self._exec.get(key)  # default may already be compiled
+                self.metrics.add("dispatch_requests_total", kernel=kernel,
+                                 path="build_failed")
         if fn is None:
             if built is None:
-                built = spec.builder(config, **static_kw)
+                with tracer.span("dispatch.build", kernel=kernel,
+                                 signature=sig_key):
+                    built = spec.builder(config, **static_kw)
             fn = jax.jit(built) if self.jit else built
+            # the cached executable is the instrumented wrapper, so repeat
+            # dispatches return the identical object and every execution
+            # lands in the per-signature latency histogram
+            fn = self._instrument_execute(fn, kernel, sig_key)
         # publish: executable insert, fast-map store, and the TTL sweep share
         # the final critical section
         with self._lock:
@@ -182,6 +212,36 @@ class DispatchService:
     def call(self, kernel: str, *args, **static_kw):
         """Resolve, build, and run in one step."""
         return self.dispatch(kernel, *args, **static_kw)(*args)
+
+    def _instrument_execute(self, fn: Callable, kernel: str,
+                            sig_key: str) -> Callable:
+        """Wrap an executable so every call records into the per-signature
+        execute-latency histogram (and a trace span when tracing is on).
+        The wrapper is what the executable cache stores, so the identity
+        contract (repeat dispatch returns the same object) is unchanged.
+
+        On asynchronous backends this times dispatch-to-return as the caller
+        observes it — the same quantity a serving loop's own latency sees;
+        it does not force a ``block_until_ready`` sync, which would
+        serialize the pipeline it is measuring."""
+        metrics, backend = self.metrics, self.backend
+
+        def timed(*a, **kw):
+            tracer = get_tracer()
+            t0 = time.perf_counter()
+            try:
+                if tracer.enabled:
+                    with tracer.span("dispatch.execute", kernel=kernel,
+                                     signature=sig_key):
+                        return fn(*a, **kw)
+                return fn(*a, **kw)
+            finally:
+                metrics.observe("dispatch_execute_seconds",
+                                time.perf_counter() - t0, kernel=kernel,
+                                signature=sig_key, backend=backend)
+
+        timed.__wrapped__ = fn
+        return timed
 
     def _enqueue_tuning(self, spec, kernel, sig, args, static_kw) -> None:
         def factory(cfg):
@@ -218,14 +278,29 @@ class DispatchService:
     def telemetry(self) -> dict:
         """One merged serving-telemetry view: the dispatch counters, the
         background tuner's optimizer-overhead aggregates (ask/tell/wait
-        seconds), and the sync agent's replication lag (ops pending,
-        last-sync age) when one is attached."""
+        seconds), the sync agent's replication lag (ops pending, last-sync
+        age) when one is attached, and — under ``execute_latency`` —
+        per-signature p50/p99 execute latency from the obs registry's
+        histograms. All pre-existing flat keys are unchanged."""
         with self._lock:
             out = dict(self.stats)
         if self.tuner is not None and getattr(self.tuner, "stats", None):
             out.update(self.tuner.stats)
         if self._sync is not None:
             out.update(self._sync.lag())
+        out["execute_latency"] = [
+            {
+                "kernel": row["labels"].get("kernel"),
+                "signature": row["labels"].get("signature"),
+                "backend": row["labels"].get("backend"),
+                "count": row["count"],
+                "p50_sec": row["p50"],
+                "p99_sec": row["p99"],
+                "mean_sec": row["sum"] / row["count"] if row["count"] else None,
+            }
+            for row in summarize_histograms(
+                self.metrics.snapshot(), name="dispatch_execute_seconds")
+        ]
         return out
 
     # -- cache management --------------------------------------------------------

@@ -33,6 +33,8 @@ from repro.core.plopper import EvalResult
 from repro.core.search import BayesianSearch, SearchResult
 from repro.core.space import ConfigurationSpace, config_key
 from repro.engine.executors import Executor, make_executor
+from repro.obs.metrics import get_registry
+from repro.obs.trace import span as obs_span
 
 __all__ = ["Campaign"]
 
@@ -70,9 +72,16 @@ class Campaign:
         if executor is None and evaluator is None:
             raise ValueError("Campaign needs an evaluator or an executor")
         self._owns_executor = executor is None
+        self.learner = learner.upper()
+        # obs integration: per-phase latencies land in the process registry
+        # (campaign_{ask,tell,wait,evaluate}_seconds{learner=}) alongside the
+        # plain `timings` dict below, and each phase opens a trace span —
+        # a campaign run with REPRO_TRACE set renders as one timeline.
+        self._metrics = get_registry()
+        if executor is None:
+            evaluator = self._instrument_evaluator(evaluator)
         self.executor = executor if executor is not None else make_executor(evaluator, parallel)
         self.max_evals = max_evals
-        self.learner = learner.upper()
         self.warm_start = list(warm_start or [])
         self.callback = callback
         self.db = db if db is not None else PerformanceDatabase(
@@ -115,27 +124,53 @@ class Campaign:
                 self.executor.shutdown(wait=True)
         return self.result()
 
+    def _instrument_evaluator(self, evaluator):
+        """Wrap the evaluator so each evaluation is a trace span and a
+        ``campaign_evaluate_seconds`` observation (runs on executor worker
+        threads; shard-local recording keeps it lock-free)."""
+        metrics, learner = self._metrics, self.learner
+
+        def evaluate(cfg):
+            t0 = time.perf_counter()
+            try:
+                with obs_span("campaign.evaluate", learner=learner):
+                    return evaluator(cfg)
+            finally:
+                metrics.observe("campaign_evaluate_seconds",
+                                time.perf_counter() - t0, learner=learner)
+
+        return evaluate
+
     def _tell(self, config: Mapping[str, Any], result: EvalResult) -> None:
         t0 = time.perf_counter()
-        rec = self.search.tell(config, result)
-        self.timings["tell_sec"] += time.perf_counter() - t0
+        with obs_span("campaign.tell", learner=self.learner):
+            rec = self.search.tell(config, result)
+        dt = time.perf_counter() - t0
+        self.timings["tell_sec"] += dt
         self.timings["n_tells"] += 1
+        self._metrics.observe("campaign_tell_seconds", dt, learner=self.learner)
         if self.callback:
             self.callback(rec)
 
     def _tell_skipped(self, config: Mapping[str, Any]) -> None:
         t0 = time.perf_counter()
-        rec = self.search.tell_skipped(config)
-        self.timings["tell_sec"] += time.perf_counter() - t0
+        with obs_span("campaign.tell", learner=self.learner, skipped=True):
+            rec = self.search.tell_skipped(config)
+        dt = time.perf_counter() - t0
+        self.timings["tell_sec"] += dt
         self.timings["n_tells"] += 1
+        self._metrics.observe("campaign_tell_seconds", dt, learner=self.learner)
         if self.callback:
             self.callback(rec)
 
     def _ask(self, n: int) -> list[dict]:
         t0 = time.perf_counter()
-        batch = self.search.ask(n)
-        self.timings["ask_sec"] += time.perf_counter() - t0
+        with obs_span("campaign.ask", learner=self.learner, n=n):
+            batch = self.search.ask(n)
+        dt = time.perf_counter() - t0
+        self.timings["ask_sec"] += dt
         self.timings["n_asks"] += 1
+        self._metrics.observe("campaign_ask_seconds", dt, learner=self.learner)
         return batch
 
     def _run_warm_start(self) -> None:
@@ -203,7 +238,10 @@ class Campaign:
                     break  # budget fully recorded (evals + skips)
                 t0 = time.perf_counter()
                 done, _ = cf.wait(list(inflight), return_when=cf.FIRST_COMPLETED)
-                self.timings["wait_sec"] += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                self.timings["wait_sec"] += dt
+                self._metrics.observe("campaign_wait_seconds", dt,
+                                      learner=self.learner)
                 for fut in [f for f in order if f in done]:
                     cfg = inflight.pop(fut)
                     keys_inflight.discard(config_key(cfg))

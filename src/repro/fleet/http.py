@@ -11,7 +11,10 @@ point an :class:`HttpTransport` at it:
 * ``POST /ops``          → JSONL body of ops the client pushes; the server
   ingests them through its replica (merge + store fold + service
   invalidation) and answers ``{"applied": n}``;
-* ``GET /status``        → the replica's status dict.
+* ``GET /status``        → the replica's status dict;
+* ``GET /metrics``       → this process's obs registry in Prometheus text
+  form (sync-duration/replication-lag histograms and any other metrics the
+  serving process records).
 
 ``push`` asks the peer for its vector first and ships only the delta, so
 re-pushing after a restart is a no-op — the same idempotence contract as
@@ -83,6 +86,11 @@ class _Handler(BaseHTTPRequestHandler):
                        ctype="application/jsonl")
         elif url.path == "/status":
             self._send(200, json.dumps(self.replica.status()).encode())
+        elif url.path == "/metrics":
+            from repro.obs.export import prometheus_text
+
+            self._send(200, prometheus_text().encode(),
+                       ctype="text/plain; version=0.0.4; charset=utf-8")
         else:
             self._send(404, b'{"error": "not found"}')
 
@@ -161,3 +169,9 @@ class HttpTransport(Transport):
 
     def pending(self, oplog: OpLog) -> int:
         return len(oplog.ops_after(self._remote_vv()))
+
+    def status(self) -> dict:
+        """The peer's own status dict (including its ``obs`` histogram
+        summaries) — `repro-fleet status --transport http://...` shows the
+        serving process's numbers, not just this client's."""
+        return json.loads(self._get("/status"))

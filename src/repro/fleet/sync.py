@@ -30,6 +30,8 @@ from repro.dispatch.signature import parse_signature_key
 from repro.dispatch.store import TuningStore
 from repro.fleet.oplog import Op, OpLog
 from repro.fleet.transport import Transport
+from repro.obs.metrics import get_registry, summarize_histograms
+from repro.obs.trace import span as obs_span
 
 __all__ = ["Replica", "SyncAgent"]
 
@@ -146,6 +148,12 @@ class Replica:
         if transport is not None:
             out["transport"] = transport.describe()
             out["ops_pending"] = transport.pending(self.oplog)
+        # sync-duration + replication-lag histograms (count/p50/p99) from
+        # this process's obs registry — populated by any SyncAgent cycles run
+        # here (the `serve --interval` daemon, or a one-shot `sync`); empty
+        # for a process that has not synced
+        out["obs"] = summarize_histograms(
+            get_registry().snapshot(), prefix="fleet_")
         return out
 
 
@@ -164,8 +172,12 @@ class SyncAgent:
         self.replica = replica
         self.transport = transport
         self.interval_sec = interval_sec
+        # per-cycle pull/merge/push durations accumulate here (flat view)
+        # and into the obs registry's fleet_{pull,merge,push,cycle}_seconds
+        # histograms, labeled by host
         self.stats = {"cycles": 0, "sync_applied": 0, "sync_published": 0,
-                      "sync_errors": 0, "ops_pending": 0, "last_sync": 0.0}
+                      "sync_errors": 0, "ops_pending": 0, "last_sync": 0.0,
+                      "pull_sec": 0.0, "merge_sec": 0.0, "push_sec": 0.0}
         self.errors: list[BaseException] = []
         self._max_errors = max_errors
         self._wake = threading.Event()
@@ -179,31 +191,72 @@ class SyncAgent:
 
     def sync_once(self) -> dict:
         applied = published = pending = 0
+        pull_sec = merge_sec = push_sec = 0.0
+        host = self.replica.host_id
+        registry = get_registry()
+        with self._lock:
+            last = self.stats["last_sync"]
+        if last:
+            # replication lag proxy: how stale this replica was when the
+            # cycle started (time since its previous successful sync)
+            registry.observe("fleet_replication_lag_seconds",
+                             time.time() - last, host=host)
+        t_cycle = time.perf_counter()
         try:
-            pulled = self.transport.pull(self.replica.oplog)
-            applied = self.replica.ingest(pulled)
-            published = self.transport.push(self.replica.oplog)
+            t0 = time.perf_counter()
+            with obs_span("fleet.pull", host=host):
+                pulled = self.transport.pull(self.replica.oplog)
+            pull_sec = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            with obs_span("fleet.merge", host=host, ops=len(pulled)):
+                applied = self.replica.ingest(pulled)
+            merge_sec = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            with obs_span("fleet.push", host=host):
+                published = self.transport.push(self.replica.oplog)
+            push_sec = time.perf_counter() - t0
             pending = self.transport.pending(self.replica.oplog)
             self.replica.oplog.note_sync(
                 applied=applied, published=published, pending=pending)
         except Exception as e:  # noqa: BLE001 — anti-entropy must outlive peers
+            self._record_durations(registry, host, pull_sec, merge_sec,
+                                   push_sec, time.perf_counter() - t_cycle)
             with self._lock:
                 self.stats["sync_errors"] += 1
                 self.errors.append(e)
                 del self.errors[:-self._max_errors]
             return {"applied": applied, "published": published,
                     "pending": pending, "error": repr(e)}
+        self._record_durations(registry, host, pull_sec, merge_sec, push_sec,
+                               time.perf_counter() - t_cycle)
+        registry.set_gauge("fleet_ops_pending", pending, host=host)
         with self._lock:
             self.stats["cycles"] += 1
             self.stats["sync_applied"] += applied
             self.stats["sync_published"] += published
             self.stats["ops_pending"] = pending
             self.stats["last_sync"] = time.time()
+            self.stats["pull_sec"] += pull_sec
+            self.stats["merge_sec"] += merge_sec
+            self.stats["push_sec"] += push_sec
         svc = self.replica.service
         if svc is not None and published:
             with svc._lock:
                 svc.stats["sync_published"] += published
+        # the returned dict keeps its pre-obs shape (callers compare it
+        # exactly); per-cycle durations live in self.stats and the registry
         return {"applied": applied, "published": published, "pending": pending}
+
+    @staticmethod
+    def _record_durations(registry, host, pull_sec, merge_sec, push_sec,
+                          cycle_sec) -> None:
+        """Feed one cycle's phase durations into the obs histograms. Runs on
+        the error path too — a cycle that dies mid-push still accounts for
+        the pull/merge time it spent."""
+        registry.observe("fleet_pull_seconds", pull_sec, host=host)
+        registry.observe("fleet_merge_seconds", merge_sec, host=host)
+        registry.observe("fleet_push_seconds", push_sec, host=host)
+        registry.observe("fleet_cycle_seconds", cycle_sec, host=host)
 
     def lag(self) -> dict:
         """Replication-lag view merged into ``DispatchService.telemetry()``."""

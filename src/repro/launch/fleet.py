@@ -60,7 +60,16 @@ def main(argv=None) -> int:
     transport = transport_from_spec(args.transport) if args.transport else None
 
     if args.cmd == "status":
-        print(json.dumps(replica.status(transport), indent=2))
+        out = replica.status(transport)
+        # an HTTP peer can report its own status (incl. the serving
+        # process's obs histograms — the numbers that matter for a daemon
+        # running `serve --interval`); file transports have no process to ask
+        if transport is not None and hasattr(transport, "status"):
+            try:
+                out["peer"] = transport.status()
+            except Exception as e:  # noqa: BLE001 — status must not fail hard
+                out["peer"] = {"error": repr(e)}
+        print(json.dumps(out, indent=2))
         return 0
 
     if args.cmd == "serve":

@@ -1,0 +1,71 @@
+"""repro.obs — unified observability: metrics, tracing, exposition.
+
+Three layers, each usable alone:
+
+* :mod:`repro.obs.metrics` — a process-wide :class:`MetricsRegistry` of
+  counters, gauges, and log-bucketed latency histograms with *fixed* bucket
+  boundaries, so histograms merge deterministically across threads, processes,
+  and hosts. Recording is lock-free (per-thread shards); folding happens only
+  at snapshot time.
+* :mod:`repro.obs.trace` — span-based tracing writing append-only
+  Chrome-trace-event JSONL (one event per line). Off by default; enable with
+  ``configure_tracer(path)`` or the ``REPRO_TRACE=path`` environment
+  variable. ``repro-obs summarize --perfetto out.json`` wraps the JSONL into
+  a Perfetto-loadable ``{"traceEvents": [...]}`` file.
+* :mod:`repro.obs.export` — JSONL snapshot writer, Prometheus text
+  exposition, and the stdlib-``http.server`` :class:`ObsServer` serving
+  ``/metrics`` + ``/snapshot``.
+
+The serving/tuning stack (``repro.dispatch``, ``repro.engine``,
+``repro.fleet``) records into the default registry and traces through the
+default tracer; see README "Observability" for the metric names and label
+schema.
+"""
+
+from repro.obs.metrics import (
+    BUCKET_BOUNDS,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    histogram_quantile,
+    merge_snapshots,
+    set_registry,
+    summarize_histograms,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    Tracer,
+    configure_tracer,
+    export_chrome_trace,
+    get_tracer,
+    span,
+    validate_trace,
+)
+from repro.obs.export import (
+    ObsServer,
+    prometheus_text,
+    read_snapshot_file,
+    write_snapshot,
+)
+
+__all__ = [
+    "BUCKET_BOUNDS",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "set_registry",
+    "histogram_quantile",
+    "merge_snapshots",
+    "summarize_histograms",
+    "Tracer",
+    "NULL_TRACER",
+    "configure_tracer",
+    "get_tracer",
+    "span",
+    "validate_trace",
+    "export_chrome_trace",
+    "ObsServer",
+    "prometheus_text",
+    "write_snapshot",
+    "read_snapshot_file",
+]

@@ -230,6 +230,28 @@ def test_campaign_resumes_from_jsonl_checkpoint(tmp_path):
     assert not (seen_before & seen_after)
 
 
+def test_resume_timings_accumulate_post_checkpoint(tmp_path):
+    """SearchResult.timings on a resumed campaign covers the post-resume
+    epoch: a fresh Campaign builds a fresh timings dict, so the resumed run
+    reports its own ask/tell counts from the checkpoint forward — not zeros,
+    and not a double-count of the first run's work."""
+    db_path = str(tmp_path / "camp")
+    first = Campaign(small_space(), evaluator, max_evals=6, seed=3,
+                     db_path=db_path).run()
+    assert first.timings["n_tells"] == 6
+
+    resumed = Campaign(small_space(), evaluator, max_evals=12, seed=3,
+                       db_path=db_path)
+    assert resumed.remaining == 6
+    res = resumed.run()
+    assert len(res.db) == 12
+    # exactly the 6 post-resume evaluations were told this epoch
+    assert res.timings["n_tells"] == 6
+    assert res.timings["n_asks"] > 0
+    assert res.timings["ask_sec"] > 0.0
+    assert res.timings["tell_sec"] > 0.0
+
+
 def test_parallel_resume_exact_budget(tmp_path):
     db_path = str(tmp_path / "camp")
     Campaign(small_space(), evaluator, max_evals=9, seed=2, db_path=db_path,
