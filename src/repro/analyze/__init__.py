@@ -1,0 +1,35 @@
+"""repro.analyze — static analysis for the tuning stack.
+
+Two passes, no tracing, no builds:
+
+  * :mod:`repro.analyze.feasibility` — declarative per-kernel constraint
+    rules that judge a configuration against the problem dims before any
+    code runs (the paper's Floyd-Warshall post-mortem, turned into a
+    pre-flight check for the search and dispatch paths);
+  * :mod:`repro.analyze.lint` — an AST-based concurrency lint that checks
+    the documented threading invariants of ``src/repro`` itself (lock
+    order, guarded shared-state mutation, monotonic duration clocks,
+    daemon/stop handling for threads).
+
+CLI: ``python -m repro.launch.analyze {space,lint}`` (``repro-analyze``).
+"""
+
+from repro.analyze.feasibility import (
+    Feasibility,
+    Finding,
+    check_config,
+    feasibility_filter,
+    kernel_rules,
+)
+from repro.analyze.lint import LintFinding, lint_paths, lint_source
+
+__all__ = [
+    "Feasibility",
+    "Finding",
+    "check_config",
+    "feasibility_filter",
+    "kernel_rules",
+    "LintFinding",
+    "lint_paths",
+    "lint_source",
+]

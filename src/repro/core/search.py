@@ -80,6 +80,7 @@ class BayesianSearch:
         seed: int = 1234,
         db: PerformanceDatabase | None = None,
         prior_records: list[tuple[Mapping[str, Any], float]] | None = None,
+        feasibility: Callable[[Mapping[str, Any]], bool] | None = None,
     ):
         self.space = space
         self.learner_name = learner.upper()
@@ -87,6 +88,14 @@ class BayesianSearch:
         self.kappa = kappa
         self.init_method = init_method
         self.n_candidates = n_candidates
+        # static feasibility predicate (repro.analyze): candidates it
+        # rejects are pruned from the pool before acquisition scoring, so
+        # the optimizer never spends surrogate evaluations on configs that
+        # cannot build. Opt-in (None = off) — pruning changes which configs
+        # reach the acquisition argsort, and the bit-identical legacy
+        # trajectory contract covers the default-off path.
+        self.feasibility = feasibility
+        self.n_pruned = 0  # statically-infeasible candidates discarded
         self.rng = np.random.default_rng(seed)
         self.seed = seed
         self.db = db if db is not None else PerformanceDatabase()
@@ -228,6 +237,9 @@ class BayesianSearch:
         else:
             base = self.space.sample_configurations(self.n_candidates, self.rng)
             Xb = self.space.encode_many(base)
+            # prune before caching so a batch pays the feasibility sweep of
+            # the base pool once, and n_pruned counts each config once
+            base, Xb = self._apply_feasibility(base, Xb)
             if self._batch_active:
                 self._pool_base = (base, Xb)
         best = self.db.best()
@@ -235,8 +247,30 @@ class BayesianSearch:
             extra = [self.space.mutate(best.config, self.rng)
                      for _ in range(self.n_candidates // 8)]
             if extra:
-                return base + extra, np.concatenate([Xb, self.space.encode_many(extra)])
+                Xe = self.space.encode_many(extra)
+                extra, Xe = self._apply_feasibility(extra, Xe)
+            if extra:
+                return base + extra, np.concatenate([Xb, Xe])
         return list(base), Xb
+
+    def _apply_feasibility(self, pool: list[dict], X: np.ndarray):
+        """Drop statically-infeasible candidates (and their feature rows)
+        before they reach the surrogate. Sampling already consumed the RNG,
+        so pruning never perturbs the stream; with the predicate unset this
+        is an identity pass. If *every* candidate is infeasible the raw pool
+        survives as a fallback — proposing a doomed config (which tell()
+        records as failed) beats proposing nothing."""
+        if self.feasibility is None or not pool:
+            return pool, X
+        mask = np.fromiter((bool(self.feasibility(c)) for c in pool),
+                           dtype=bool, count=len(pool))
+        n_bad = int(len(pool) - mask.sum())
+        if n_bad == 0:
+            return pool, X
+        self.n_pruned += n_bad
+        if not mask.any():
+            return pool, X
+        return [c for c, keep in zip(pool, mask) if keep], X[mask]
 
     def ask(self, n: int | None = None) -> dict | list[dict]:
         """Propose the next candidate(s). ``ask()`` returns a single config
@@ -333,6 +367,7 @@ def run_search(
     warm_start_records: list[tuple[Mapping[str, Any], float]] | None = None,
     parallel: int = 1,
     executor=None,
+    feasibility: Callable[[Mapping[str, Any]], bool] | None = None,
 ) -> SearchResult:
     """Run a full campaign (Sec. 2.3 steps 4-8) — a thin adapter over
     :class:`repro.engine.Campaign`. Resumable: if ``db_path`` already holds
@@ -352,5 +387,5 @@ def run_search(
         db_path=db_path, n_initial=n_initial, init_method=init_method,
         kappa=kappa, acq=acq, callback=callback, warm_start=warm_start,
         warm_start_records=warm_start_records, parallel=parallel,
-        executor=executor,
+        executor=executor, feasibility=feasibility,
     ).run()

@@ -31,6 +31,7 @@ from typing import Any, Callable
 
 import jax
 
+from repro.analyze.feasibility import check_config
 from repro.core.space import config_key
 from repro.engine.executors import evaluator_for_spec
 from repro.dispatch.lookup import Resolution, resolve
@@ -74,9 +75,14 @@ class DispatchService:
         # signature -> (exec key, monotonic expiry): lets repeat dispatches
         # skip store refresh + nearest-neighbor scan on the hot path
         self._fast: dict[tuple, tuple[tuple, float]] = {}
+        # build_failed counts configs that died in the builder/eval_shape;
+        # infeasible counts configs the static feasibility pass
+        # (repro.analyze) rejected BEFORE any build was attempted — the two
+        # were one stat before the analyze subsystem split them
         self.stats = {
             "store_exact": 0, "store_near": 0, "store_default": 0,
             "exec_hit": 0, "exec_miss": 0, "bg_enqueued": 0, "build_failed": 0,
+            "infeasible": 0,
             "serve_rebuilt": 0, "sync_applied": 0, "sync_published": 0,
         }
         self._sync = None  # repro.fleet.SyncAgent, via attach_sync()
@@ -162,6 +168,31 @@ class DispatchService:
             self.stats["exec_hit" if fn is not None else "exec_miss"] += 1
         built = None
         if fn is None and res is not None:
+            # statically-infeasible store records never cost a build or an
+            # eval_shape: the feasibility pass proves from the config and
+            # the signature's problem dims alone that the builder would die
+            # (missing params, non-positive tiles, VMEM over budget, ...).
+            # Exact hits are quarantined with the machine-readable reason
+            # codes; near neighbors just degrade (same asymmetry as the
+            # runtime build_failed path below).
+            verdict = check_config(kernel, config, signature=sig,
+                                   target=self.target)
+            if not verdict.ok:
+                if self.store is not None and res.exact:
+                    with tracer.span("dispatch.quarantine", kernel=kernel,
+                                     signature=sig_key,
+                                     reason=verdict.reason()):
+                        self.store.quarantine(res.record,
+                                              reason=verdict.reason())
+                res = None
+                config = spec.default_config(self.target)
+                key = fast_key + (config_key(config),)
+                with self._lock:
+                    self.stats["infeasible"] += 1
+                    fn = self._exec.get(key)  # default may already be compiled
+                self.metrics.add("dispatch_requests_total", kernel=kernel,
+                                 path="infeasible")
+        if fn is None and res is not None:
             # a store-resolved config is untrusted input to the serving path:
             # validate build + abstract trace now, so a poisoned record
             # degrades to the default config instead of raising at the caller
@@ -179,7 +210,8 @@ class DispatchService:
                 if self.store is not None and res.exact:
                     with tracer.span("dispatch.quarantine", kernel=kernel,
                                      signature=sig_key):
-                        self.store.quarantine(res.record)
+                        self.store.quarantine(res.record,
+                                              reason="build_failed")
                 built, res = None, None
                 config = spec.default_config(self.target)
                 key = fast_key + (config_key(config),)

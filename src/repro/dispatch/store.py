@@ -62,6 +62,7 @@ class TuningRecord:
     def age_sec(self, now: float | None = None) -> float:
         if not self.created:
             return float("inf")
+        # lint: allow=REP101 record `created` stamps are cross-process wall-clock
         return (now if now is not None else time.time()) - self.created
 
     def to_json(self) -> dict:
@@ -219,7 +220,11 @@ class TuningStore:
         key = (kernel, signature_key(self._canon(signature)), backend)
         rec = self._best.get(key)
         if rec is not None:
-            self._access[key] = time.time()
+            # under the lock: compact() rewrites _access wholesale while
+            # holding it, and a touch landing in the superseded dict would
+            # silently vanish from the LRU ordering compact evicts by
+            with self._tlock:
+                self._access[key] = time.time()
         return rec
 
     def peek(self, kernel: str, signature: ShapeSignature, backend: str) -> TuningRecord | None:
@@ -236,6 +241,26 @@ class TuningStore:
         log append attempt per historical quarantine."""
         rec = dataclasses.replace(rec, signature=self._canon(rec.signature))
         return self._qkey(rec) in self._quarantined
+
+    def quarantines(self, kernel: str | None = None) -> list[dict]:
+        """The quarantine tombstones in this process's view, each with its
+        machine-readable ``reason`` (empty string for tombstones written
+        before reasons existed, and for replicated bans — reasons are
+        host-local). Keys: kernel, signature, backend, config, reason."""
+        out = []
+        with self._tlock:
+            lines = list(self._quarantined_json.values())
+        for line in lines:
+            if kernel is not None and line.get("kernel") != kernel:
+                continue
+            out.append({
+                "kernel": line.get("kernel"),
+                "signature": line.get("signature"),
+                "backend": line.get("backend"),
+                "config": line.get("config"),
+                "reason": line.get("reason", ""),
+            })
+        return out
 
     def records(self, kernel: str | None = None, backend: str | None = None) -> list[TuningRecord]:
         return [
@@ -270,14 +295,22 @@ class TuningStore:
                 self._op_sink("put", rec)
             return True
 
-    def quarantine(self, rec: TuningRecord) -> None:
+    def quarantine(self, rec: TuningRecord, reason: str = "") -> None:
         """Ban this record's exact (kernel, signature, backend, config) from
         being served or re-accepted — the dispatch service calls this when a
-        stored config fails to build or trace. The tombstone is appended to
-        the log, so other processes pick it up on their next refresh."""
+        stored config fails to build or trace, or when the static
+        feasibility pass (repro.analyze) rejects it. The tombstone is
+        appended to the log, so other processes pick it up on their next
+        refresh. ``reason`` is a machine-readable code string (e.g.
+        ``"build_failed"`` or feasibility codes like
+        ``"tile_not_positive:bi"``) persisted on the tombstone line and
+        surfaced by :meth:`quarantines` / ``repro-fleet status``; replicated
+        quarantine ops do not carry it (the reason stays host-local)."""
         rec = dataclasses.replace(rec, signature=self._canon(rec.signature))
         line = rec.to_json()
         line["quarantined"] = True
+        if reason:
+            line["reason"] = reason
         with self._lock():
             repair_torn_tail(self._log_path())
             self.refresh()

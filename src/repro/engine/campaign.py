@@ -68,6 +68,7 @@ class Campaign:
         warm_start: list | None = None,
         warm_start_records: list[tuple[Mapping[str, Any], float]] | None = None,
         callback: Callable[[Record], None] | None = None,
+        feasibility: Callable[[Mapping[str, Any]], bool] | None = None,
     ):
         if executor is None and evaluator is None:
             raise ValueError("Campaign needs an evaluator or an executor")
@@ -89,15 +90,18 @@ class Campaign:
         self.search = BayesianSearch(
             space, learner=learner, kappa=kappa, acq=acq, n_initial=n_initial,
             init_method=init_method, seed=seed, db=self.db,
-            prior_records=warm_start_records,
+            prior_records=warm_start_records, feasibility=feasibility,
         )
         # optimizer-overhead telemetry: how much wall-clock the tuner itself
         # costs (surrogate fits + acquisition scans in ask, DB appends in
         # tell) vs time blocked on evaluation results. Fed into
         # SearchResult.timings and aggregated by BackgroundTuner.stats so
         # serving hosts can watch the tuner's CPU bill.
+        # n_pruned mirrors BayesianSearch.n_pruned: candidates the static
+        # feasibility pass (repro.analyze) discarded before acquisition
+        # scoring — 0 unless a feasibility predicate was supplied.
         self.timings = {"ask_sec": 0.0, "tell_sec": 0.0, "wait_sec": 0.0,
-                        "n_asks": 0, "n_tells": 0}
+                        "n_asks": 0, "n_tells": 0, "n_pruned": 0}
 
     # -- introspection -----------------------------------------------------------
 
@@ -170,6 +174,7 @@ class Campaign:
         dt = time.perf_counter() - t0
         self.timings["ask_sec"] += dt
         self.timings["n_asks"] += 1
+        self.timings["n_pruned"] = self.search.n_pruned
         self._metrics.observe("campaign_ask_seconds", dt, learner=self.learner)
         return batch
 

@@ -135,13 +135,22 @@ class Replica:
         self.store.refresh()
         self.oplog.refresh()
         last = self.oplog.last_sync()
+        quarantines = self.store.quarantines()
         out = {
             "host": self.host_id,
             "records": len(self.store),
             "ops": len(self.oplog),
+            # quarantine tombstones with their machine-readable reasons
+            # (build_failed, or repro.analyze feasibility codes); replicated
+            # bans carry an empty reason — reasons are host-local
+            "quarantined": [
+                {"kernel": q["kernel"], "signature": q["signature"],
+                 "backend": q["backend"], "reason": q["reason"]}
+                for q in quarantines
+            ],
             "clock": self.oplog._clock,
             "version_vector": self.oplog.version_vector(),
-            "last_sync_age_sec": (
+            "last_sync_age_sec": (  # lint: allow=REP101 oplog sync stamps are cross-process wall-clock
                 round(time.time() - last["time"], 3) if last else None),
             "last_sync": last,
         }
@@ -178,6 +187,9 @@ class SyncAgent:
         self.stats = {"cycles": 0, "sync_applied": 0, "sync_published": 0,
                       "sync_errors": 0, "ops_pending": 0, "last_sync": 0.0,
                       "pull_sec": 0.0, "merge_sec": 0.0, "push_sec": 0.0}
+        # monotonic companion to stats["last_sync"] (which stays wall-clock
+        # for display): in-process age/lag math must not step under NTP
+        self._last_sync_mono = 0.0
         self.errors: list[BaseException] = []
         self._max_errors = max_errors
         self._wake = threading.Event()
@@ -195,12 +207,12 @@ class SyncAgent:
         host = self.replica.host_id
         registry = get_registry()
         with self._lock:
-            last = self.stats["last_sync"]
-        if last:
+            last_mono = self._last_sync_mono
+        if last_mono:
             # replication lag proxy: how stale this replica was when the
             # cycle started (time since its previous successful sync)
             registry.observe("fleet_replication_lag_seconds",
-                             time.time() - last, host=host)
+                             time.monotonic() - last_mono, host=host)
         t_cycle = time.perf_counter()
         try:
             t0 = time.perf_counter()
@@ -235,7 +247,8 @@ class SyncAgent:
             self.stats["sync_applied"] += applied
             self.stats["sync_published"] += published
             self.stats["ops_pending"] = pending
-            self.stats["last_sync"] = time.time()
+            self.stats["last_sync"] = time.time()  # wall-clock, display only
+            self._last_sync_mono = time.monotonic()
             self.stats["pull_sec"] += pull_sec
             self.stats["merge_sec"] += merge_sec
             self.stats["push_sec"] += push_sec
@@ -261,11 +274,12 @@ class SyncAgent:
     def lag(self) -> dict:
         """Replication-lag view merged into ``DispatchService.telemetry()``."""
         with self._lock:
-            last = self.stats["last_sync"]
+            last_mono = self._last_sync_mono
             return {
                 "sync_ops_pending": self.stats["ops_pending"],
                 "sync_last_age_sec": (
-                    round(time.time() - last, 3) if last else float("inf")),
+                    round(time.monotonic() - last_mono, 3)
+                    if last_mono else float("inf")),
                 "sync_errors": self.stats["sync_errors"],
             }
 

@@ -1,0 +1,149 @@
+"""repro-analyze — static analysis CLI (see :mod:`repro.analyze`).
+
+    # audit every kernel's config space against the canonical shape table:
+    # what fraction of sampled configs is statically infeasible (errors) or
+    # pathological (warnings, e.g. the Floyd-Warshall-style padding blowup)?
+    python -m repro.launch.analyze space [--kernel K] [--samples N] \
+        [--json] [--out FILE]
+
+    # concurrency lint over the codebase (lock order, guarded mutations,
+    # monotonic clocks, daemon threads); non-zero exit when findings exceed
+    # --max-findings — the CI gate
+    python -m repro.launch.analyze lint [PATH ...] [--max-findings N] [--json]
+
+Both commands print JSON with ``--json``; ``space --out FILE`` additionally
+writes the audit next to the BENCH artifacts for CI upload.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+
+def _default_lint_paths() -> list[str]:
+    import repro
+
+    return [os.path.dirname(os.path.abspath(repro.__file__))]
+
+
+def cmd_lint(args) -> int:
+    from repro.analyze.lint import lint_paths
+
+    paths = args.paths or _default_lint_paths()
+    findings = lint_paths(paths)
+    if args.json:
+        print(json.dumps({
+            "paths": paths,
+            "n_findings": len(findings),
+            "max_findings": args.max_findings,
+            "findings": [f.to_dict() for f in findings],
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        print(f"{len(findings)} finding(s) "
+              f"(budget: {args.max_findings})")
+    return 0 if len(findings) <= args.max_findings else 1
+
+
+def _audit_kernel(kernel: str, target: str, dims: tuple, samples: int,
+                  seed: int) -> dict:
+    from repro.analyze.feasibility import check_config
+    from repro.kernels.spaces import kernel_space
+
+    space = kernel_space(
+        kernel, target="host" if target == "host" else "tpu", seed=seed)
+    rng = np.random.default_rng(seed)
+    cfgs = [space.default_configuration()]
+    cfgs += space.sample_configurations(samples, rng)
+    n_error = n_warn = 0
+    codes: dict[str, int] = {}
+    for cfg in cfgs:
+        verdict = check_config(kernel, cfg, dims=dims, target=target)
+        if not verdict.ok:
+            n_error += 1
+        elif verdict.warnings:
+            n_warn += 1
+        for f in verdict.findings:
+            codes[f.code] = codes.get(f.code, 0) + 1
+    n = len(cfgs)
+    return {
+        "kernel": kernel,
+        "target": target,
+        "dims": list(dims),
+        "n_sampled": n,
+        "n_infeasible": n_error,
+        "n_pathological": n_warn,
+        "infeasible_fraction": round(n_error / n, 4),
+        "pathological_fraction": round(n_warn / n, 4),
+        "codes": dict(sorted(codes.items(), key=lambda kv: -kv[1])),
+    }
+
+
+def cmd_space(args) -> int:
+    from repro.kernels.problems import BENCH_DIMS, LARGE_SHAPES
+
+    kernels = [args.kernel] if args.kernel else sorted(BENCH_DIMS)
+    rows = []
+    for kernel in kernels:
+        # host spaces at bench dims (backend B1), TPU spaces at the paper's
+        # LARGE dims under the analytic cost model (backend B2)
+        rows.append(_audit_kernel(kernel, "host", BENCH_DIMS[kernel],
+                                  args.samples, args.seed))
+        rows.append(_audit_kernel(kernel, "cost", LARGE_SHAPES[kernel],
+                                  args.samples, args.seed))
+    out = {"samples_per_space": args.samples, "seed": args.seed, "audit": rows}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as fh:
+            json.dump(out, fh, indent=2)
+    if args.json:
+        print(json.dumps(out, indent=2))
+    else:
+        hdr = (f"{'kernel':<16} {'target':<6} {'infeasible':>10} "
+               f"{'pathological':>12}  top codes")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            top = ", ".join(f"{c}({n})" for c, n
+                            in list(r["codes"].items())[:3]) or "-"
+            print(f"{r['kernel']:<16} {r['target']:<6} "
+                  f"{r['infeasible_fraction']:>9.1%} "
+                  f"{r['pathological_fraction']:>11.1%}  {top}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro-analyze", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sp = sub.add_parser("space", help="config-space feasibility audit")
+    sp.add_argument("--kernel", default=None,
+                    help="audit one kernel (default: all registered)")
+    sp.add_argument("--samples", type=int, default=512,
+                    help="sampled configs per (kernel, target) space")
+    sp.add_argument("--seed", type=int, default=1234)
+    sp.add_argument("--json", action="store_true",
+                    help="print the full audit as JSON")
+    sp.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the JSON audit to FILE (CI artifact)")
+    sp.set_defaults(fn=cmd_space)
+
+    lp = sub.add_parser("lint", help="concurrency lint (REP101-REP104)")
+    lp.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: the repro package)")
+    lp.add_argument("--max-findings", type=int, default=0,
+                    help="max findings before a non-zero exit (CI gate)")
+    lp.add_argument("--json", action="store_true")
+    lp.set_defaults(fn=cmd_lint)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -52,6 +52,11 @@ def main(argv=None) -> int:
                     help="TuningStore to warm-start from (nearest-neighbor seed)")
     ap.add_argument("--store", default=None, metavar="STORE_DIR",
                     help="TuningStore to publish this campaign's best into")
+    ap.add_argument("--prune-infeasible", action="store_true",
+                    help="statically prune infeasible candidates from the "
+                         "acquisition pool (repro.analyze feasibility rules; "
+                         "off by default — pruning changes fixed-seed "
+                         "trajectories)")
     args = ap.parse_args(argv)
 
     if args.resume and not args.db:
@@ -83,10 +88,23 @@ def main(argv=None) -> int:
         print(f"resume: {k} record(s) checkpointed, "
               f"{max(0, args.max_evals - k)} evaluation(s) remaining")
 
+    feasibility = None
+    if args.prune_infeasible:
+        from repro.analyze.feasibility import feasibility_filter
+        from repro.kernels.problems import BENCH_DIMS, LARGE_SHAPES
+        dims = (BENCH_DIMS if args.backend == "host" else LARGE_SHAPES)[args.kernel]
+        feasibility = feasibility_filter(
+            args.kernel, dims=dims,
+            target="host" if args.backend == "host" else "cost")
+
     res = autotune(space, evaluator, max_evals=args.max_evals,
                    learner=args.learner, seed=args.seed, db_path=args.db,
                    parallel=args.parallel,
-                   warm_start=warm_cfgs, warm_start_records=warm_recs)
+                   warm_start=warm_cfgs, warm_start_records=warm_recs,
+                   feasibility=feasibility)
+    if feasibility is not None and res.timings:
+        print(f"feasibility: pruned {res.timings.get('n_pruned', 0)} "
+              f"statically-infeasible candidate(s) from the acquisition pool")
 
     if args.store and res.best is not None:
         from repro.dispatch import TuningRecord, TuningStore

@@ -36,13 +36,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, knobs: dict | None = N
         return {"arch": arch, "shape": shape_name,
                 "mesh": "x".join(map(str, mesh.devices.shape)),
                 "status": "skipped", "reason": reason}
-    t0 = time.time()
+    t0 = time.perf_counter()
     plan = plan_cell(arch, shape_name, mesh, knobs)
     lowered, aux = lower_cell(plan, mesh)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     rep = analyze_compiled(compiled, chips=plan.chips,
                            model_flops=aux["model_flops"])

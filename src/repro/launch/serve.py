@@ -42,10 +42,10 @@ def main(argv=None) -> int:
         kw["enc_embed"] = jax.random.normal(
             jax.random.PRNGKey(2), (args.batch, cfg.encoder_len, cfg.d_model))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = greedy_decode(params, cfg, prompt, steps=args.gen, max_len=max_len, **kw)
     jax.block_until_ready(out)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[serve] generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
           f"({args.batch*args.gen/dt:.1f} tok/s incl. compile)")
     print("[serve] first request ids:", out[0].tolist())

@@ -63,7 +63,7 @@ def main(argv=None) -> int:
     stream = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
     mon = StragglerMonitor()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for s in range(start, args.steps):
         batch = make_batch(stream, s)
         mon.start()
@@ -81,7 +81,7 @@ def main(argv=None) -> int:
     if ckpt:
         ckpt.save({"params": params, "opt": opt}, args.steps)
         ckpt.wait()
-    print(f"[train] done in {time.time()-t0:.1f}s")
+    print(f"[train] done in {time.perf_counter()-t0:.1f}s")
     return 0
 
 

@@ -118,7 +118,11 @@ def test_greedy_decode_service_poisoned_record_degrades(tmp_path):
                            {"impl": "bogus", "bq": 4, "bk": 4}, 1.0))
     svc = DispatchService(store)
     toks = greedy_decode(params, cfg, prompt, steps=3, max_len=12, service=svc)
-    assert svc.stats["build_failed"] >= 1          # degraded, did not raise
+    # the static feasibility pass rejects impl="bogus" before any build is
+    # attempted (invalid_choice:impl), so this counts as "infeasible", not
+    # "build_failed" — degraded either way, did not raise
+    assert svc.stats["infeasible"] >= 1
+    assert svc.stats["build_failed"] == 0
     np.testing.assert_array_equal(np.asarray(toks), np.asarray(base))
     # the poisoned record is quarantined, not re-served
     assert store.get("flash_attention", sig, "host") is None
