@@ -221,6 +221,37 @@ class FuseDivides(Rule):
         return f"{self.name} divides 2*tsteps"
 
 
+class PageDividesSeq(Rule):
+    """Paged-KV layout contract: the dispatch signature's seq dim is the
+    paged cache's *bucket* — by construction a multiple of the config's
+    ``page`` (``serve.kvcache`` rounds every view up to page granularity).
+    A record whose ``page`` does not divide the signature's S describes a
+    layout that cannot have produced this signature: serving it would pair
+    a tuned page size with buckets it never sees, so the mismatch is fatal
+    for the (cache layout, kernel) pair even though the builder itself —
+    which only reads the view it is handed — would trace fine."""
+
+    def __init__(self, name: str = "page", dim_index: int = 2):
+        self.name = name
+        self.dim_index = dim_index
+
+    def check(self, cfg, ctx):
+        v = cfg.get(self.name)
+        if not (_is_int(v) and v > 0):
+            return  # PositiveIntTiles owns malformed values
+        if ctx.dims is None or self.dim_index >= len(ctx.dims):
+            return
+        s = int(ctx.dims[self.dim_index])
+        if s % v != 0:
+            yield Finding(
+                f"page_indivisible:{self.name}", ERROR,
+                f"{self.name}={v} does not divide the seq bucket S={s}",
+                self.name)
+
+    def describe(self):
+        return f"{self.name} divides the signature's seq bucket"
+
+
 class VmemBudget(Rule):
     """TPU-class targets only: the analytic cost model derives the VMEM
     footprint from the BlockSpec geometry; over-budget configs are the
@@ -391,6 +422,14 @@ KERNEL_RULES: dict[str, tuple[Rule, ...]] = {
         VmemBudget(),
         MxuAlign("bq", "bk"),
         GridBound({"bq": 1, "bk": 2}),
+    ),
+    "decode_attention": (
+        ChoiceIn("impl", ("pallas", "xla")),
+        PositiveIntTiles("bk", "hg", "page"),
+        PageDividesSeq("page", dim_index=2),
+        VmemBudget(),
+        MxuAlign("bk"),
+        GridBound({"hg": 0, "bk": 2}),
     ),
     "matmul": (
         PositiveIntTiles("bm", "bn", "bk"),

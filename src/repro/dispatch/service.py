@@ -86,6 +86,7 @@ class DispatchService:
             "serve_rebuilt": 0, "sync_applied": 0, "sync_published": 0,
         }
         self._sync = None  # repro.fleet.SyncAgent, via attach_sync()
+        self._kv_cache = None  # serve.PagedKVCache, via attach_kv_cache()
         self._exec: dict[tuple, Callable] = {}
         # jit_cached sources + stable per-name proxies: invalidate() drops the
         # compiled entry, and the proxy (which callers hold) lazily re-jits
@@ -307,19 +308,30 @@ class DispatchService:
         if self.tuner is not None and getattr(self.tuner, "on_publish", None) is None:
             self.tuner.on_publish = lambda rec: agent.nudge()
 
+    def attach_kv_cache(self, cache) -> None:
+        """Bind a :class:`repro.serve.PagedKVCache`: its paged accounting
+        (pages allocated vs tokens resident, occupancy) shows up in
+        :meth:`telemetry` under ``kv_cache`` next to the dispatch counters
+        the same serving loop produces."""
+        self._kv_cache = cache
+
     def telemetry(self) -> dict:
         """One merged serving-telemetry view: the dispatch counters, the
         background tuner's optimizer-overhead aggregates (ask/tell/wait
         seconds), the sync agent's replication lag (ops pending, last-sync
-        age) when one is attached, and — under ``execute_latency`` —
-        per-signature p50/p99 execute latency from the obs registry's
-        histograms. All pre-existing flat keys are unchanged."""
+        age) when one is attached, the attached paged KV cache's
+        page/token accounting (under ``kv_cache``), and — under
+        ``execute_latency`` — per-signature p50/p99 execute latency from
+        the obs registry's histograms. All pre-existing flat keys are
+        unchanged."""
         with self._lock:
             out = dict(self.stats)
         if self.tuner is not None and getattr(self.tuner, "stats", None):
             out.update(self.tuner.stats)
         if self._sync is not None:
             out.update(self._sync.lag())
+        if self._kv_cache is not None:
+            out["kv_cache"] = self._kv_cache.stats()
         out["execute_latency"] = [
             {
                 "kernel": row["labels"].get("kernel"),

@@ -173,6 +173,35 @@ def flash_attention_cost(cfg: Mapping, BH: int, Sq: int, Sk: int, hd: int):
     return _finish(t, hbm, vmem, flops)
 
 
+def decode_attention_cost(cfg: Mapping, BH: int, G: int, S: int, hd: int):
+    """The decode hot path: one token's attention against an S-token cache.
+    Memory-bound by construction — the whole KV stream crosses HBM once per
+    token. ``page`` pads S up to the seq bucket the paged cache would serve
+    (the layout axis's modeled cost: bigger pages mean more padded keys per
+    token); ``hg`` rows share a grid cell, amortizing the q/o block DMA."""
+    page = max(1, int(cfg.get("page", 128)))
+    S_eff = cdiv(S, page) * page
+    bk = max(1, min(int(cfg.get("bk", 128)), S_eff))
+    hg = max(1, min(int(cfg.get("hg", 1)), BH))
+    impl = str(cfg.get("impl", "pallas"))
+    flops = 4.0 * BH * G * S_eff * hd  # qk^T + pv contractions
+    if impl == "xla":
+        # chunked fallback: scores stay register/cache resident per chunk,
+        # but the scan re-reads q per chunk and runs f32 end to end
+        nk = cdiv(S_eff, bk)
+        hbm = BH * (nk * G + G) * hd * _F32 + 2 * BH * S_eff * hd * _BF16
+        vmem = (G * bk + 2 * bk * hd + 2 * G * hd) * _F32
+        eff = _align_eff(G, bk, hd)
+    else:
+        # q/o cross once per row-group; k/v stream once (the BlockSpec maps)
+        hbm = 2 * BH * G * hd * _BF16 + 2 * BH * S_eff * hd * _BF16
+        vmem = (hg * G * hd + 2 * bk * hd) * _BF16 \
+            + (hg * G * hd + 2 * hg * G) * _F32  # acc + m/l scratch
+        eff = _align_eff(hg * G, bk, hd)
+    t = max(flops / (HW.peak_flops * eff), hbm / HW.hbm_bw)
+    return _finish(t, hbm, vmem, flops)
+
+
 def matmul_cost(cfg: Mapping, M: int, K: int, N: int):
     bm = int(cfg.get("bm", 128))
     bn = int(cfg.get("bn", 128))
@@ -192,6 +221,7 @@ KERNEL_COST_FNS = {
     "covariance": covariance_cost,
     "floyd_warshall": floyd_warshall_cost,
     "flash_attention": flash_attention_cost,
+    "decode_attention": decode_attention_cost,
     "matmul": matmul_cost,
 }
 

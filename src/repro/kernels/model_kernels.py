@@ -27,12 +27,15 @@ from typing import Any, Mapping
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention import chunked_decode_xla, decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.variants import blocked_matmul_host
 
 __all__ = [
     "chunked_attention_xla", "flash_attention_builder", "matmul_builder",
+    "decode_attention_builder", "decode_attention_signature",
     "flash_attention_signature", "init_flash_attention", "init_matmul",
+    "init_decode_attention", "decode_attention_host",
     "flash_attention_host", "matmul_host", "MODEL_KERNEL_BUILDERS",
     "register_model_kernels",
 ]
@@ -92,6 +95,23 @@ def flash_attention_builder(cfg: Mapping[str, Any], *, causal: bool = True):
     raise ValueError(f"unknown flash_attention impl {impl!r}")
 
 
+def decode_attention_builder(cfg: Mapping[str, Any], *, ring: bool = False,
+                             window: int = 0):
+    """Decode-attention variants under one dispatch entry. ``page`` is part
+    of the tuned config but is a *layout* axis realized by the paged KV
+    cache (it decides the seq bucket the signature's S lands on), so the
+    builder ignores it — both impls read the cache view they are handed."""
+    impl = str(cfg.get("impl", "pallas"))
+    bk, hg = int(cfg.get("bk", 128)), int(cfg.get("hg", 1))
+    if impl == "xla":
+        return functools.partial(chunked_decode_xla, ring=ring, window=window,
+                                 bk=bk)
+    if impl == "pallas":
+        return functools.partial(decode_attention, ring=ring, window=window,
+                                 bk=bk, hg=hg)
+    raise ValueError(f"unknown decode_attention impl {impl!r}")
+
+
 def matmul_builder(cfg: Mapping[str, Any]):
     return functools.partial(
         blocked_matmul_host,
@@ -103,6 +123,7 @@ def matmul_builder(cfg: Mapping[str, Any]):
 
 MODEL_KERNEL_BUILDERS = {
     "flash_attention": flash_attention_builder,
+    "decode_attention": decode_attention_builder,
     "matmul": matmul_builder,
 }
 
@@ -140,6 +161,30 @@ def init_flash_attention(BH: int, Sq: int, Sk: int, hd: int,
     return q, k, v
 
 
+def decode_attention_signature(BH: int, G: int, S: int, hd: int,
+                               *, ring: bool = False, window: int = 0) -> tuple:
+    """The signature ``service.dispatch('decode_attention', q, k, v,
+    cur_pos, ring=..., window=...)`` derives at runtime. ``BH`` is batch
+    times kv heads (the GQA route flattens per kv-head rows, G query heads
+    ride along as a dense axis); ``S`` is the *seq bucket* — the paged
+    cache's view length, always a multiple of the tuned ``page``. The
+    (BH,) entry is the per-row ``cur_pos`` vector; the trailing dims are
+    the static ``ring``/``window`` kwargs folded in sorted order ((2,) =
+    ring, (1,) = linear; window clamps to (1,) when disabled)."""
+    return ((BH, G, hd), (BH, S, hd), (BH, S, hd), (BH,),
+            (2,) if ring else (1,), (max(1, int(window)),))
+
+
+def init_decode_attention(BH: int, G: int, S: int, hd: int,
+                          dtype=jnp.float32, seed: int = 0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (BH, G, hd), dtype)
+    k = jax.random.normal(ks[1], (BH, S, hd), dtype)
+    v = jax.random.normal(ks[2], (BH, S, hd), dtype)
+    cur_pos = jnp.full((BH,), S - 1, jnp.int32)   # fully-resident cache
+    return q, k, v, cur_pos
+
+
 def init_matmul(M: int, K: int, N: int, dtype=jnp.float32, seed: int = 0):
     ks = jax.random.split(jax.random.PRNGKey(seed), 2)
     a = jax.random.normal(ks[0], (M, K), dtype) / jnp.sqrt(K).astype(dtype)
@@ -150,6 +195,13 @@ def init_matmul(M: int, K: int, N: int, dtype=jnp.float32, seed: int = 0):
 def flash_attention_host(problem):
     def factory(cfg):
         return flash_attention_builder(cfg), problem
+
+    return factory
+
+
+def decode_attention_host(problem):
+    def factory(cfg):
+        return decode_attention_builder(cfg), problem
 
     return factory
 

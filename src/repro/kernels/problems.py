@@ -54,6 +54,7 @@ BENCH_DIMS = {
     "covariance": (300, 240),
     "floyd_warshall": (240,),
     "flash_attention": (4, 128, 128, 64),
+    "decode_attention": (8, 2, 128, 64),   # (BH, G, seq_bucket, hd)
     "matmul": (256, 192, 224),
 }
 
@@ -67,6 +68,7 @@ LARGE_SHAPES = {
     "covariance": (1400, 1200),
     "floyd_warshall": (2800,),
     "flash_attention": (16, 4096, 4096, 128),
+    "decode_attention": (16, 8, 4096, 128),
     "matmul": (2000, 2300, 2600),
 }
 
@@ -78,6 +80,7 @@ DEFAULTS_TPU = {
     "covariance": dict(bi=128, bj=128, bk=256),
     "floyd_warshall": dict(bs=64, bi=128, bj=128, unroll=1),
     "flash_attention": dict(impl="pallas", bq=128, bk=128),
+    "decode_attention": dict(impl="pallas", bk=128, hg=1, page=128),
     "matmul": dict(bm=128, bn=128, bk=128, pack=True),
 }
 
@@ -94,6 +97,8 @@ def bench_problem(name: str):
         return V.heat3d_host(R.init_heat3d(dims[0]), tsteps=dims[1])
     if name == "flash_attention":
         return MK.flash_attention_host(MK.init_flash_attention(*dims))
+    if name == "decode_attention":
+        return MK.decode_attention_host(MK.init_decode_attention(*dims))
     if name == "matmul":
         return MK.matmul_host(MK.init_matmul(*dims))
     init = getattr(R, f"init_{name}")
@@ -144,6 +149,9 @@ def dims_from_signature(kernel: str, signature) -> tuple:
     if kernel == "flash_attention":
         (BH, Sq, hd), (_, Sk, _) = signature[0], signature[1]
         return (BH, Sq, Sk, hd)
+    if kernel == "decode_attention":
+        (BH, G, hd), (_, S, _) = signature[0], signature[1]
+        return (BH, G, S, hd)
     if kernel == "matmul":
         (M, K), (_, N) = signature[0], signature[1]
         return (M, K, N)

@@ -187,6 +187,11 @@ def problem_signature(name: str, *dims: int) -> tuple:
         # trailing (2,) = the static `causal=True` kwarg the service folds in
         BH, Sq, Sk, hd = dims
         return ((BH, Sq, hd), (BH, Sk, hd), (BH, Sk, hd), (2,))
+    if name == "decode_attention":
+        # (BH,) = per-row cur_pos; trailing (1,), (1,) = the static
+        # `ring=False`/`window=0` defaults the service folds in
+        BH, G, S, hd = dims
+        return ((BH, G, hd), (BH, S, hd), (BH, S, hd), (BH,), (1,), (1,))
     if name == "matmul":
         M, K, N = dims
         return ((M, K), (K, N))

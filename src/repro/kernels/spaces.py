@@ -142,6 +142,34 @@ def flash_attention_space(target: str = "tpu", seed: int = 1234) -> Configuratio
     return cs
 
 
+# decode KV-block tiles and paged-cache page sizes; host entries small
+# enough that interpret-mode sweeps stay millisecond-scale
+DECODE_TILES_TPU = (128, 256, 512, 1024)
+DECODE_TILES_HOST = (8, 16, 32, 64, 128, 256)
+PAGE_SIZES_TPU = (64, 128, 256, 512)
+PAGE_SIZES_HOST = (8, 16, 32, 64, 128)
+
+
+def decode_attention_space(target: str = "tpu", seed: int = 1234) -> ConfigurationSpace:
+    """Decode-attention space: KV block ``bk``, head-grouping ``hg`` (rows
+    per grid cell), the ``impl`` variant axis, and the paged KV cache's
+    ``page`` size — a layout axis (arXiv 2010.06521's point that layout
+    belongs in the tuned space): it fixes the seq-bucket granularity the
+    dispatch signature sees, trading padded attention work against
+    per-bucket retrace frequency."""
+    cs = ConfigurationSpace(seed=seed)
+    tiles = DECODE_TILES_TPU if target == "tpu" else DECODE_TILES_HOST
+    pages = PAGE_SIZES_TPU if target == "tpu" else PAGE_SIZES_HOST
+    cs.add_hyperparameters([
+        Categorical("impl", ("pallas", "xla"),
+                    default="pallas" if target == "tpu" else "xla"),
+        Ordinal("bk", tiles, default=128),
+        Ordinal("hg", (1, 2, 4, 8), default=1),
+        Ordinal("page", pages, default=pages[-1]),
+    ])
+    return cs
+
+
 def matmul_space(target: str = "tpu", seed: int = 1234) -> ConfigurationSpace:
     """Blocked-matmul space for the model projection/unembed call sites."""
     cs = ConfigurationSpace(seed=seed)
@@ -163,6 +191,7 @@ KERNEL_SPACES = {
     "covariance": covariance_space,
     "floyd_warshall": floyd_warshall_space,
     "flash_attention": flash_attention_space,
+    "decode_attention": decode_attention_space,
     "matmul": matmul_space,
 }
 

@@ -44,6 +44,32 @@ def _service_attention(q, k, v, *, causal, service):
     return out.reshape(B, Sq, H, hd)
 
 
+def _service_decode(q, k_cache, v_cache, cur_pos, *, ring, window, service):
+    """Route single-token decode attention through the dispatch service's
+    tuned ``decode_attention`` variant. The cache is flattened to the
+    kernel's (batch*kv_heads, seq, head_dim) layout — the shape signature
+    tuned ``(bk, hg)`` blocks resolve against, with the seq dim being the
+    paged cache's bucket — and ``cur_pos`` becomes a per-row (B*K,) vector
+    (continuous batching gives every sequence its own position). Returns
+    None for ragged GQA grouping, letting the caller fall back to the
+    dense einsum path."""
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    if K == 0 or H % K:
+        return None
+    qg = q.reshape(B, K, H // K, hd).reshape(B * K, H // K, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    cp = jnp.asarray(cur_pos, jnp.int32).reshape(-1)
+    if cp.shape[0] == 1:
+        cp = jnp.broadcast_to(cp, (B,))
+    cp = jnp.repeat(cp, K)                      # row b*K + k shares seq b's pos
+    fn = service.dispatch("decode_attention", qg, kf, vf, cp,
+                          ring=bool(ring), window=int(window or 0))
+    o = fn(qg, kf, vf, cp)                      # (B*K, G, hd)
+    return o.reshape(B, K, H // K, hd).reshape(B, 1, H, hd).astype(q.dtype)
+
+
 def make_positions(B: int, S: int) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
 
@@ -121,18 +147,31 @@ def gqa_decode(
     q: jnp.ndarray,            # (B, 1, H, hd)
     k_cache: jnp.ndarray,      # (B, S, K, hd)
     v_cache: jnp.ndarray,      # (B, S, K, hd)
-    cur_pos,                   # scalar: index of the new token
+    cur_pos,                   # scalar or (B,): index of each new token
     *,
     window=None,
     ring: bool = False,
     scale: float | None = None,
+    service=None,
 ) -> jnp.ndarray:
     """One-token attention against a filled cache (positions <= cur_pos).
 
     ``ring=True`` treats the cache as a circular buffer of the last S tokens
     (windowed-KV layout: slot j holds absolute position cur_pos - ((cur_pos -
     j) mod S)), so sliding-window archs cache O(window) instead of O(seq) —
-    how the 500k-decode cell fits."""
+    how the 500k-decode cell fits. ``cur_pos`` may be a (B,) vector
+    (continuous batching: per-sequence positions). ``service`` routes the
+    call through the tuned ``decode_attention`` dispatch entry when the
+    window is statically known (see blocks.attn_layer_decode's gating)."""
+    # the dispatch path: a traced per-layer window scalar cannot fold into
+    # the static signature, so callers gate on the arch having no windowed
+    # layers; custom scales stay on the einsum path for exact-variant parity
+    if service is not None and scale is None \
+            and (window is None or isinstance(window, int)):
+        out = _service_decode(q, k_cache, v_cache, cur_pos, ring=ring,
+                              window=window, service=service)
+        if out is not None:
+            return out
     B, _, H, hd = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = H // K
@@ -145,14 +184,18 @@ def gqa_decode(
     s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
     slots = jnp.arange(S)
+    # (B|1, 1) per-row positions: scalar cur_pos keeps its original (1, S)
+    # broadcast semantics bit-for-bit; a (B,) vector masks each row by its
+    # own position
+    cpb = jnp.asarray(cur_pos).reshape(-1)[:, None]
     if ring:
-        kpos = cur_pos - jnp.mod(cur_pos - slots, S)   # absolute positions
+        kpos = cpb - jnp.mod(cpb - slots[None, :], S)  # absolute positions
     else:
-        kpos = slots
-    valid = (kpos[None, :] <= cur_pos) & (kpos[None, :] >= 0)
+        kpos = jnp.broadcast_to(slots[None, :], (cpb.shape[0], S))
+    valid = (kpos <= cpb) & (kpos >= 0)
     if window is not None:
         w = jnp.asarray(window)
-        valid &= jnp.where(w > 0, (cur_pos - kpos[None, :]) < w, True)
+        valid &= jnp.where(w > 0, (cpb - kpos) < w, True)
     s = jnp.where(valid[:, None, None, :], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     # probabilities drop to the cache dtype (flash-style) so the PV

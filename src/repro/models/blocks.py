@@ -144,31 +144,48 @@ def attn_layer_decode(p, x, cache, pos, *, cfg: ArchConfig, window=None,
                       moe: bool = False, mla_absorb: bool = True,
                       service=None):
     """x: (B,1,d); cache: {'k': (B,S,K,hd), 'v': ...} or MLA latent cache.
-    Returns (x, cache, aux). ``service`` routes the output projection through
-    the dispatch service's tuned blocked matmul (single-token attention
-    itself stays on the einsum decode path — it is masked by ``pos``, which
-    the flash kernel cannot express)."""
+    Returns (x, cache, aux). ``pos`` may be a (B,) vector for the GQA
+    family (continuous batching: per-sequence decode positions; the cache
+    insert becomes a per-row scatter). ``service`` routes the output
+    projection through the tuned blocked matmul and — for archs with no
+    windowed layers, where the per-layer window scalar is statically zero —
+    single-token attention through the tuned ``decode_attention`` kernel."""
     B = x.shape[0]
     h = rms_norm(x, p["ln1"])
     if cfg.attn_type == "mla":
         attn, cache = mla_decode(p["mla"], h, cache, cfg, pos, absorb=mla_absorb)
         x = x + attn
     else:
-        positions = jnp.full((B, 1), pos)
+        # window rides through the layer scan as a traced scalar, so the
+        # decode dispatch route is gated statically (cf. attn_layer_train)
+        svc_attn = service if not (cfg.sliding_window or cfg.local_global_ratio) \
+            else None
+        positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1)[:, None], (B, 1))
         if cfg.mrope:
             positions = jnp.broadcast_to(positions[:, None, :], (B, 3, 1))
         q, k, v = _qkv(p, h, cfg, positions)
         S_alloc = cache["k"].shape[1]
         ring = bool(cfg.sliding_window) and not cfg.local_global_ratio \
             and S_alloc == cfg.sliding_window
-        slot = jnp.mod(pos, S_alloc) if ring else pos
-        cache = {
-            "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                              (0, slot, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                              (0, slot, 0, 0)),
-        }
-        o = gqa_decode(q, cache["k"], cache["v"], pos, window=window, ring=ring)
+        if jnp.ndim(pos) == 0:
+            slot = jnp.mod(pos, S_alloc) if ring else pos
+            cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)),
+            }
+        else:
+            # per-sequence positions: row b writes its own slot
+            slots = jnp.mod(pos, S_alloc) if ring else pos
+            rows = jnp.arange(B)
+            cache = {
+                "k": cache["k"].at[rows, slots].set(k[:, 0].astype(cache["k"].dtype)),
+                "v": cache["v"].at[rows, slots].set(v[:, 0].astype(cache["v"].dtype)),
+            }
+        o = gqa_decode(q, cache["k"], cache["v"], pos,
+                       window=None if svc_attn is not None else window,
+                       ring=ring, service=svc_attn)
         x = x + service_matmul(o.reshape(B, 1, -1), p["wo"], service)
 
     h2 = rms_norm(x, p["ln2"])

@@ -311,9 +311,12 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
 
 def decode_step(params: dict, cache: dict, token: jnp.ndarray, pos,
                 cfg: ArchConfig, *, mla_absorb: bool = True, service=None):
-    """token: (B, 1) int32; pos: scalar. Returns (logits (B, V), new cache).
-    ``service`` routes the decode-path matmul call sites (attention output
-    projection, unembed) through tuned dispatch variants."""
+    """token: (B, 1) int32; pos: scalar, or (B,) per-sequence positions for
+    the GQA families (continuous batching). Returns (logits (B, V), new
+    cache). ``service`` routes the decode-path matmul call sites (attention
+    output projection, unembed) and — where the arch's window schedule is
+    statically empty — single-token attention through tuned dispatch
+    variants."""
     x = params["embed"][token].astype(cfg.dtype)
     if cfg.name.startswith("gemma"):
         x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)

@@ -1,7 +1,12 @@
-"""repro.serve — KV cache + prefill/decode serving steps."""
+"""repro.serve — KV cache (dense + paged) + prefill/decode serving steps."""
 
-from repro.serve.kvcache import cache_bytes, cache_bytes_per_token, init_cache
+from repro.serve.kvcache import (
+    PagedKVCache,
+    cache_bytes,
+    cache_bytes_per_token,
+    init_cache,
+)
 from repro.serve.step import greedy_decode, make_serve_step, prefill
 
-__all__ = ["cache_bytes", "cache_bytes_per_token", "init_cache",
-           "greedy_decode", "make_serve_step", "prefill"]
+__all__ = ["PagedKVCache", "cache_bytes", "cache_bytes_per_token",
+           "init_cache", "greedy_decode", "make_serve_step", "prefill"]

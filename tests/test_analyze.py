@@ -71,6 +71,12 @@ def test_accepted_sampled_configs_build(kernel):
      "fuse_not_positive:fuse_t"),
     ("flash_attention", {"impl": "xla", "bq": 1024, "bk": 128},
      LARGE_SHAPES["flash_attention"], "cost", "vmem_overflow"),
+    ("decode_attention", {"impl": "cuda", "bk": 128, "hg": 1, "page": 128},
+     BENCH_DIMS["decode_attention"], "host", "invalid_choice:impl"),
+    # the paged layout contract: the signature's seq is the cache bucket,
+    # always a whole multiple of the record's page — 48 never divides 128
+    ("decode_attention", {"impl": "xla", "bk": 128, "hg": 1, "page": 48},
+     BENCH_DIMS["decode_attention"], "host", "page_indivisible:page"),
 ])
 def test_known_bad_configs_rejected_with_stable_codes(
         kernel, cfg, dims, target, code):

@@ -138,3 +138,122 @@ def test_serve_step_emits_argmax_token():
     nxt, logits, _ = serve(params, cache, tok, 0)
     np.testing.assert_array_equal(
         np.asarray(nxt[:, 0]), np.asarray(jnp.argmax(logits, -1)))
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_bytes_paged_rounding():
+    from repro.serve import cache_bytes
+
+    cfg = get_config("qwen2-0.5b")
+    per = cache_bytes_per_token(cfg)
+    assert cache_bytes(cfg, 2, 100) == per * 2 * 100
+    # paged layout allocates whole pages: 100 tokens on 64-token pages = 128
+    assert cache_bytes(cfg, 2, 100, page_size=64) == per * 2 * 128
+    assert cache_bytes(cfg, 2, 128, page_size=64) == per * 2 * 128
+
+
+def test_paged_cache_rejects_unsupported_archs():
+    from repro.serve import PagedKVCache
+
+    with pytest.raises(ValueError):
+        PagedKVCache(_cfg("deepseek-v2-236b"), 2, 16)   # MLA latent cache
+    with pytest.raises(ValueError):
+        PagedKVCache(_cfg("gemma3-1b"), 2, 16)          # windowed ring cache
+    with pytest.raises(ValueError):
+        PagedKVCache(_cfg("qwen2-0.5b"), 2, 16, page_size=0)
+
+
+def test_paged_decode_matches_per_request_greedy():
+    """Continuous batching on bucketed views reproduces each request's
+    solo greedy_decode tokens exactly — admit/view/writeback round-trip
+    plus per-row positions change nothing."""
+    from repro.serve import PagedKVCache
+
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(cfg, KEY)
+    prompts = [jax.random.randint(jax.random.PRNGKey(31), (1, 5), 0,
+                                  cfg.vocab_size),
+               jax.random.randint(jax.random.PRNGKey(32), (1, 3), 0,
+                                  cfg.vocab_size)]
+    steps = 4
+    pc = PagedKVCache(cfg, max_batch=4, max_len=16, page_size=8)
+    base = [np.asarray(greedy_decode(params, cfg, p, steps=steps,
+                                     max_len=pc.alloc)) for p in prompts]
+
+    serve = make_serve_step(cfg)
+    slots, toks = [0, 2], []
+    for slot, p in zip(slots, prompts):
+        logits, cache = prefill(params, {"tokens": p}, cfg, max_len=pc.alloc)
+        pc.admit(slot, cache, p.shape[1])
+        toks.append([int(jnp.argmax(logits[:, -1, :], -1)[0])])
+    assert pc.active_slots() == slots
+    cur = jnp.asarray([[t[-1]] for t in toks], jnp.int32)
+    for _ in range(steps - 1):
+        bucket = pc.seq_bucket(slots)
+        view = pc.view(slots, bucket)
+        nxt, _, view = serve(params, view, cur, pc.pos_vector(slots) + 1)
+        pc.writeback(slots, bucket, view)
+        pc.advance(slots)
+        for i, t in enumerate(toks):
+            t.append(int(nxt[i, 0]))
+        cur = nxt
+    for got, want in zip(toks, base):
+        np.testing.assert_array_equal(np.asarray(got), want[0])
+
+
+def test_paged_cache_accounting_and_telemetry(tmp_path):
+    """stats() reports pages allocated (whole pages per sequence) vs tokens
+    resident, and an attached cache surfaces under telemetry()['kv_cache']."""
+    from repro.dispatch import DispatchService, TuningStore
+    from repro.serve import PagedKVCache, init_cache
+
+    cfg = _cfg("qwen2-0.5b")
+    pc = PagedKVCache(cfg, max_batch=4, max_len=16, page_size=8)
+    assert pc.alloc == 16
+    pc.admit(1, init_cache(cfg, 1, 16, cfg.dtype), prompt_len=5)
+    pc.admit(3, init_cache(cfg, 1, 16, cfg.dtype), prompt_len=11)
+    st = pc.stats()
+    assert st["slots_active"] == 2
+    assert st["tokens_resident"] == 16
+    assert st["pages_allocated"] == 1 + 2     # ceil(5/8) + ceil(11/8)
+    assert st["page_occupancy"] == 16 / 24
+    assert st["bytes_resident"] < st["bytes_allocated"] < st["bytes_backing"]
+    # bucket covers the deepest sequence plus headroom, page-aligned
+    assert pc.seq_bucket([1]) == 8
+    assert pc.seq_bucket([1, 3]) == 16
+    pc.release(1)
+    assert pc.stats()["pages_allocated"] == 2
+
+    svc = DispatchService(TuningStore(str(tmp_path / "s")))
+    svc.attach_kv_cache(pc)
+    assert svc.telemetry()["kv_cache"]["page_size"] == 8
+
+
+def test_greedy_decode_service_resolves_tuned_decode_record(tmp_path):
+    """The decode-path dispatch contract (ninth kernel): a store record at
+    the decode signature — batch*kv_heads rows, seq = the cache bucket —
+    resolves as store_exact, builds, and reproduces un-dispatched tokens."""
+    from repro.dispatch import DispatchService, TuningRecord, TuningStore
+    from repro.kernels.model_kernels import decode_attention_signature
+
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(cfg, KEY)
+    B, S = 2, 6
+    prompt = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    base = greedy_decode(params, cfg, prompt, steps=4, max_len=12)
+
+    store = TuningStore(str(tmp_path / "s"))
+    K = cfg.n_kv_heads
+    sig = decode_attention_signature(B * K, cfg.n_heads // K, 12, cfg.hd)
+    assert store.put(TuningRecord("decode_attention", sig, "host",
+                                  {"impl": "xla", "bk": 8, "hg": 1,
+                                   "page": 4}, 1.0))
+    svc = DispatchService(store)
+    toks = greedy_decode(params, cfg, prompt, steps=4, max_len=12, service=svc)
+    assert svc.stats["store_exact"] >= 1
+    assert svc.stats["build_failed"] == 0
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(base))
