@@ -309,6 +309,105 @@ def probe_kernels(service, cfg, *, max_batch: int, bucket: int,
 
 
 # ---------------------------------------------------------------------------
+# guard phase (--inject-drift): shadow overhead + the drift-heal loop
+# ---------------------------------------------------------------------------
+
+
+def guard_drift_phase(cfg, best: dict, *, store_root: str, max_batch: int,
+                      bucket: int, quick: bool) -> dict:
+    """Measure the guard's serving cost and prove the drift loop on the
+    decode hot path.
+
+    Shadow overhead is measured where it is actually paid: eager dispatch
+    calls at the serving shape (in-model dispatches are jitted, so shadow
+    sampling — like all per-call instrumentation — only sees the eager
+    path). With ``epsilon=0.1`` nine of ten calls pay one counter check,
+    so the *median* call is a non-shadow call and must stay within 2% of
+    an unguarded service — the shadow cost lands in the tail by design.
+    Guarded and unguarded calls are interleaved and the overhead gate uses
+    min-of-N: on a shared box, scheduler noise dwarfs a ~1us deterministic
+    cost at the median, and the minimum isolates exactly the per-call cost
+    the 2% claim is about (p50s of both are still reported). Then
+    ``dispatch.latency`` is injected and the watcher must quarantine the
+    served record and degrade to the default config within two windows."""
+    from repro.guard import (GuardAgent, ShadowPolicy, WatchPolicy,
+                             guard_counters, inject)
+
+    K, G, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    BH = max_batch * K
+    args = init_decode_attention(BH, G, bucket, hd)
+    sig = decode_attention_signature(BH, G, bucket, hd)
+    reps = 100 if quick else 400
+    epsilon = 0.1
+
+    def serve(svc):
+        fn = svc.dispatch("decode_attention", *args, ring=False, window=0)
+        jax.block_until_ready(fn(*args))    # compile outside the timing
+        return fn
+
+    # -- unguarded reference ------------------------------------------------
+    store_p = TuningStore(os.path.join(store_root, "guard_plain"))
+    store_p.put(TuningRecord("decode_attention", sig, "host", dict(best), 1.0))
+    fn_plain = serve(DispatchService(store_p, metrics=MetricsRegistry()))
+
+    # -- guarded service: shadow epsilon + drift watch ----------------------
+    store_g = TuningStore(os.path.join(store_root, "guard"))
+    store_g.put(TuningRecord("decode_attention", sig, "host", dict(best), 1.0))
+    svc = DispatchService(store_g, metrics=MetricsRegistry())
+    guard = GuardAgent(
+        svc,
+        watch=WatchPolicy(drift_factor=3.0, hysteresis=2, cooldown_sec=0.0,
+                          min_samples=8),
+        shadow=ShadowPolicy(epsilon=epsilon, challenger_fraction=0.0))
+    svc.attach_guard(guard)
+    fn = serve(svc)
+
+    t_plain, t_shadow = [], []
+    for _ in range(reps):           # interleaved: box noise hits both alike
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_plain(*args))
+        t_plain.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))    # shadow tells sharpen the seed
+        t_shadow.append(time.perf_counter() - t0)
+    p50_plain = float(np.percentile(t_plain, 50))
+    p50_shadow = float(np.percentile(t_shadow, 50))
+    overhead = min(t_shadow) / min(t_plain) - 1.0
+
+    # -- injected latency regression: the watcher must heal it --------------
+    guard.check_once()                       # window base
+    delay = max(0.05, 10.0 * p50_plain)      # unambiguous drift
+    with inject("dispatch.latency", delay_sec=delay,
+                where={"kernel": "decode_attention"}):
+        for _ in range(12):
+            fn(*args)
+        first = guard.check_once()           # breach 1 of 2: hysteresis
+        for _ in range(12):
+            fn(*args)
+        decisions = guard.check_once()       # breach 2: quarantine
+    drift_ok = (first == [] and len(decisions) == 1
+                and decisions[0]["reason"].startswith("drift:"))
+    # degraded serving: the quarantined record must not resolve again
+    before = svc.stats["store_default"]
+    serve(svc)
+    fallback_ok = svc.stats["store_default"] == before + 1
+
+    return {
+        "epsilon": epsilon,
+        "p50_plain_ms": p50_plain * 1e3,
+        "p50_shadow_ms": p50_shadow * 1e3,
+        "shadow_overhead_frac": overhead,
+        "drift_ok": drift_ok,
+        "fallback_ok": fallback_ok,
+        "decisions": decisions,
+        "shadow": guard.shadow.snapshot_stats(),
+        "quarantines": guard.stats["quarantines"],
+        "fallbacks": guard.stats["fallbacks"],
+        "counters": guard_counters(svc.metrics.snapshot()),
+    }
+
+
+# ---------------------------------------------------------------------------
 # main
 # ---------------------------------------------------------------------------
 
@@ -317,6 +416,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--inject-drift", action="store_true",
+                    help="also run the guard phase: shadow-eval overhead "
+                         "and an injected-latency drift-heal scenario")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=None)
@@ -405,6 +507,20 @@ def main(argv=None) -> int:
     write_snapshot(args.obs_out, registry=svc_t.metrics, bench="serve",
                    mode="tuned")
 
+    guard_payload = None
+    if args.inject_drift:
+        bucket = min(-(-resident_typ // int(best["page"])) * int(best["page"]),
+                     max_len)
+        print("# guard phase: shadow overhead + injected-drift heal loop")
+        guard_payload = guard_drift_phase(
+            cfg, best, store_root=args.store, max_batch=args.max_batch,
+            bucket=bucket, quick=quick)
+        print(f"guard  : shadow p50 {guard_payload['p50_shadow_ms']:.3f}ms vs "
+              f"plain {guard_payload['p50_plain_ms']:.3f}ms "
+              f"({guard_payload['shadow_overhead_frac']:+.2%}), "
+              f"{guard_payload['shadow']['shadow_evals']} shadow evals, "
+              f"{guard_payload['quarantines']} quarantine(s)")
+
     payload = {
         "workload": {
             "requests": n_req, "rate_req_s": rate,
@@ -421,12 +537,27 @@ def main(argv=None) -> int:
             results["default"]["token_lat_p50_ms"]
             / results["tuned"]["token_lat_p50_ms"],
     }
+    if guard_payload is not None:
+        payload["guard"] = guard_payload
     write_bench_json(args.out, payload)
     print(f"wrote {args.out} and {args.obs_out}")
     print(f"speedup p50 tuned vs einsum : "
           f"{payload['speedup_p50_tuned_vs_einsum']:.2f}x")
     print(f"speedup p50 tuned vs default: "
           f"{payload['speedup_p50_tuned_vs_default']:.2f}x")
+
+    # guard tripwires: shadow epsilon must be ~free at the median, and the
+    # injected regression must have been quarantined with fallback
+    if guard_payload is not None:
+        limit = 0.25 if quick else 0.02   # quick runs are too short to bound
+        if guard_payload["shadow_overhead_frac"] > limit:
+            print(f"FAIL: shadow epsilon costs "
+                  f"{guard_payload['shadow_overhead_frac']:.1%} p50 "
+                  f"(limit {limit:.0%})")
+            return 1
+        if not (guard_payload["drift_ok"] and guard_payload["fallback_ok"]):
+            print(f"FAIL: drift-heal loop incomplete: {guard_payload}")
+            return 1
 
     # tripwire: p99 must exist, be finite, and be non-degenerate
     for mode, r in results.items():

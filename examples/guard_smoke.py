@@ -1,0 +1,136 @@
+"""Guard smoke: an injected latency regression heals itself end to end.
+
+The chaos scenario the resilience layer exists for, on a real kernel
+through the real serving stack:
+
+1. autotune syr2k and publish the winner into a TuningStore (the
+   baseline the drift watcher will compare live traffic against);
+2. serve it through DispatchService with a GuardAgent attached — an
+   epsilon of shadow evaluations re-times the served executable and
+   tells live measurements back into the store;
+3. inject ``dispatch.latency`` (the "driver update regressed this
+   config" fault) and run the watcher: sustained p50 drift past the
+   hysteresis threshold auto-quarantines the record with a machine-
+   readable ``drift:<ratio>x`` reason and requests a re-campaign;
+4. the next dispatch degrades to the default config (serving never
+    stalls), and the drained re-campaign — its evaluator hardened with
+   a deadline — publishes a replacement config, skipping the banned one.
+
+    PYTHONPATH=src python examples/guard_smoke.py [--evals 6] [--root DIR]
+"""
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evals", type=int, default=6)
+    ap.add_argument("--root", default=None,
+                    help="working dir (default: a fresh tempdir)")
+    ap.add_argument("--delay", type=float, default=0.2,
+                    help="injected per-dispatch latency inflation (sec)")
+    args = ap.parse_args()
+    root = args.root or tempfile.mkdtemp(prefix="repro-guard-")
+    store_dir = os.path.join(root, "store")
+
+    from repro.dispatch import BackgroundTuner, DispatchService, TuningStore
+    from repro.guard import (GuardAgent, HardenPolicy, ShadowPolicy,
+                             WatchPolicy, inject)
+    from repro.kernels import ref as R
+    from repro.launch.autotune import main as autotune_main
+
+    print(f"== tune syr2k ({args.evals} evals) into {store_dir}")
+    autotune_main(["--kernel", "syr2k", "--max-evals", str(args.evals),
+                   "--db", os.path.join(root, "campaign"),
+                   "--store", store_dir])
+
+    store = TuningStore(store_dir)
+    sig = R.problem_signature("syr2k", 240, 200)
+    banned = store.get("syr2k", sig, "host")
+    assert banned is not None, "autotune must publish a baseline record"
+    print(f"== baseline: {banned.config} @ {banned.objective:.2e}s")
+
+    tuner = BackgroundTuner(store, max_evals=args.evals,
+                            harden=HardenPolicy(deadline_sec=30.0))
+    svc = DispatchService(store, tuner=tuner)
+    guard = GuardAgent(
+        svc,
+        watch=WatchPolicy(drift_factor=3.0, hysteresis=2, cooldown_sec=0.0,
+                          min_samples=4),
+        shadow=ShadowPolicy(epsilon=1.0, challenger_fraction=0.0))
+    svc.attach_guard(guard)
+
+    C, A, B = R.init_syr2k(240, 200)
+    fn = svc.dispatch("syr2k", C, A, B)
+    assert svc.stats["store_exact"] == 1, svc.stats
+
+    print("== serve healthy traffic (shadow evaluation armed)")
+    for _ in range(6):
+        fn(C, A, B)
+    assert guard.check_once() == []          # window base
+    for _ in range(6):
+        fn(C, A, B)
+    assert guard.check_once() == []          # healthy window: no breach
+    shadow = guard.shadow.snapshot_stats()
+    assert shadow["shadow_evals"] > 0
+    print(f"   shadow: {shadow['shadow_evals']} evals, "
+          f"{shadow['shadow_tells']} store tells")
+
+    print(f"== inject dispatch.latency (+{args.delay}s on syr2k)")
+    with inject("dispatch.latency", delay_sec=args.delay,
+                where={"kernel": "syr2k"}):
+        for _ in range(5):
+            fn(C, A, B)
+        assert guard.check_once() == []      # breach 1 of 2: hysteresis holds
+        for _ in range(5):
+            fn(C, A, B)
+        decisions = guard.check_once()       # breach 2: sustained drift
+
+    assert len(decisions) == 1, decisions
+    d = decisions[0]
+    assert d["action"] == "quarantine" and d["reason"].startswith("drift:")
+    assert d["retune_requested"] is True
+    quars = store.quarantines("syr2k")
+    assert len(quars) == 1 and quars[0]["reason"].startswith("drift:")
+    print(f"   watcher: quarantined {d['config']} ({d['reason']}), "
+          f"re-campaign requested")
+
+    print("== degraded serving: next dispatch falls back to the default")
+    fn2 = svc.dispatch("syr2k", C, A, B)
+    assert fn2 is not fn
+    assert svc.stats["store_default"] >= 1, svc.stats
+    out = np.asarray(fn2(C, A, B))
+    np.testing.assert_allclose(
+        out, np.asarray(R.syr2k_ref(C, A, B)), rtol=1e-4, atol=1e-4)
+
+    print("== drain the hardened re-campaign")
+    tuner.drain(timeout=600)
+    tuner.shutdown()
+    assert not tuner.errors, tuner.errors
+    assert tuner.stats["campaigns"] >= 1
+    replacement = store.get("syr2k", sig, "host")
+    assert replacement is not None, "recovery must publish a replacement"
+    assert replacement.config != d["config"], \
+        "the drift-banned config must not be re-published"
+
+    summary = svc.telemetry()["guard"]
+    print(json.dumps({
+        "banned": d["config"],
+        "reason": d["reason"],
+        "replacement": replacement.config,
+        "replacement_source": replacement.source,
+        "guard_stats": {k: summary[k] for k in
+                        ("checks", "quarantines", "fallbacks", "retunes")},
+        "shadow": summary["shadow"],
+    }, indent=2))
+    print("guard smoke OK: drift detected, quarantined, degraded, re-tuned")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,13 @@ documented in comments (``dispatch/store.py`` lock-order block,
   * **REP104** — a ``threading.Thread`` started without ``daemon=True``
     and without an enclosing stop/shutdown method: an unowned thread that
     can hang interpreter exit.
+  * **REP105** — a broad ``except`` (bare / ``Exception`` /
+    ``BaseException``) inside a thread run-loop that neither increments a
+    counter nor re-raises. A daemon loop that silently eats its errors
+    looks healthy while doing nothing (the SyncAgent anti-entropy swallow
+    is the canonical *almost*-instance — it passes because it counts
+    per-error-class stats). Handlers in methods a run-loop calls each
+    iteration are covered too.
 
 Allowlist pragma (on the flagged line or the line above)::
 
@@ -66,6 +73,13 @@ _MUTATORS = frozenset({
 })
 
 _THREAD_OWNER_METHODS = frozenset({"stop", "shutdown", "close", "join_all"})
+
+# calls that count as "the error was accounted for" in a run-loop handler
+# (REP105): metric/stat increments and bounded error-list appends. Logging
+# deliberately does NOT qualify — a log line is not a queryable signal.
+_COUNTERISH = frozenset({
+    "add", "observe", "inc", "increment", "append", "record", "set_gauge",
+})
 
 _PRAGMA_RE = re.compile(r"#\s*lint:\s*allow=([A-Z0-9,]+)")
 
@@ -347,6 +361,7 @@ class Linter:
                     cm = self.classes[node.name]
                     raw += self._check_guarded_mutations(path, cm)
                     raw += self._check_lock_order(path, cm)
+                    raw += self._check_runloop_swallows(path, cm)
             findings += _apply_pragmas(raw, src)
         findings.sort(key=lambda f: (f.path, f.line, f.code))
         return findings
@@ -497,6 +512,108 @@ class Linter:
 
         for fn in cm.methods.values():
             walk(fn, ())
+        return out
+
+    # REP105 ----------------------------------------------------------------
+
+    def _check_runloop_swallows(self, path: str,
+                                cm: ClassModel) -> list[LintFinding]:
+        """Broad excepts in thread run-loops that swallow without counting.
+
+        Run-loop roots are methods handed to ``threading.Thread(target=
+        self.X)`` (plus ``run``/``_run`` in any Thread-constructing class).
+        A broad handler is flagged when it sits lexically inside a loop of
+        a root, or anywhere in a method the loop body calls (transitively,
+        within the class) — those handlers run every iteration — unless its
+        body re-raises or increments a counter/error list."""
+        roots: set[str] = set()
+        constructs_thread = False
+        for fn in cm.methods.values():
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _attr_chain(node.func)
+                if chain not in (["threading", "Thread"], ["Thread"]):
+                    continue
+                constructs_thread = True
+                for kw in node.keywords:
+                    if kw.arg == "target":
+                        tchain = _attr_chain(kw.value)
+                        if tchain and tchain[0] == "self" and len(tchain) == 2:
+                            roots.add(tchain[1])
+        if constructs_thread:
+            roots |= {n for n in ("run", "_run") if n in cm.methods}
+        roots &= cm.methods.keys()
+        if not roots:
+            return []
+
+        def self_calls(node: ast.AST) -> set[str]:
+            got = set()
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    chain = _attr_chain(sub.func)
+                    if chain and chain[0] == "self" and len(chain) == 2:
+                        got.add(chain[1])
+            return got
+
+        # methods whose handlers effectively run once per loop iteration
+        frontier: set[str] = set()
+        for r in roots:
+            for node in ast.walk(cm.methods[r]):
+                if isinstance(node, (ast.While, ast.For)):
+                    frontier |= self_calls(node)
+        loop_reachable: set[str] = set()
+        while frontier:
+            name = frontier.pop()
+            if name in loop_reachable or name not in cm.methods \
+                    or name in roots:
+                continue
+            loop_reachable.add(name)
+            frontier |= self_calls(cm.methods[name])
+
+        def broad(handler: ast.ExceptHandler) -> bool:
+            if handler.type is None:
+                return True
+            elts = (handler.type.elts
+                    if isinstance(handler.type, ast.Tuple) else [handler.type])
+            for e in elts:
+                chain = _attr_chain(e)
+                if chain and chain[-1] in ("Exception", "BaseException"):
+                    return True
+            return False
+
+        def accounted(handler: ast.ExceptHandler) -> bool:
+            for node in ast.walk(handler):
+                if isinstance(node, (ast.Raise, ast.AugAssign)):
+                    return True
+                if isinstance(node, ast.Call):
+                    chain = _attr_chain(node.func)
+                    if chain and chain[-1] in _COUNTERISH:
+                        return True
+            return False
+
+        suspect_handlers: list[ast.ExceptHandler] = []
+        for r in roots:
+            for node in ast.walk(cm.methods[r]):
+                if isinstance(node, (ast.While, ast.For)):
+                    suspect_handlers += [
+                        h for h in ast.walk(node)
+                        if isinstance(h, ast.ExceptHandler)]
+        for name in loop_reachable:
+            suspect_handlers += [
+                h for h in ast.walk(cm.methods[name])
+                if isinstance(h, ast.ExceptHandler)]
+        out, seen = [], set()
+        for h in suspect_handlers:
+            if h.lineno in seen or not broad(h) or accounted(h):
+                continue
+            seen.add(h.lineno)
+            out.append(LintFinding(
+                "REP105",
+                f"{cm.name}: broad except in a thread run-loop swallows "
+                f"errors without incrementing a counter or re-raising — a "
+                f"silently failing daemon looks healthy while doing nothing",
+                path, h.lineno))
         return out
 
     # REP104 ----------------------------------------------------------------

@@ -15,6 +15,10 @@ import json
 import os
 from typing import Any, Iterator
 
+# guard.faults is stdlib-only (and repro.guard's __init__ is lazy), so this
+# bottom-layer module can host the torn-write chaos point without a cycle
+from repro.guard.faults import FaultInjected, fault_hit
+
 __all__ = ["repair_torn_tail", "append_jsonl", "iter_jsonl_tail"]
 
 
@@ -34,12 +38,27 @@ def repair_torn_tail(path: str) -> bool:
 def append_jsonl(path: str, obj: Any, fsync: bool = False) -> int:
     """Append one JSON object as one line; returns bytes written."""
     line = json.dumps(obj) + "\n"
+    _maybe_tear(path, line)
     with open(path, "a") as f:
         f.write(line)
         f.flush()
         if fsync:
             os.fsync(f.fileno())
     return len(line.encode())
+
+
+def _maybe_tear(path: str, line: str) -> None:
+    """The ``store.torn_write`` chaos fault: when armed (repro.guard.faults),
+    simulate a writer dying mid-append — half the line lands on disk with no
+    newline, then the writer "crashes". Every durable-log append in the tree
+    funnels through :func:`append_jsonl`, so one injection point covers the
+    tuning store, the fleet oplog, and the obs snapshot log."""
+    if fault_hit("store.torn_write", path=path) is None:
+        return
+    with open(path, "a") as f:
+        f.write(line[: max(1, len(line) // 2)])
+        f.flush()
+    raise FaultInjected(f"store.torn_write: died mid-append to {path}")
 
 
 def iter_jsonl_tail(path: str, offset: int) -> Iterator[tuple[Any, int]]:

@@ -48,8 +48,15 @@ class BackgroundTuner:
         warm_neighbors: int = 3,
         parallel: int = 1,
         on_publish: Callable[[TuningRecord], None] | None = None,
+        harden: Any | None = None,
     ):
         self.store = store
+        # repro.guard.HardenPolicy (or None): when set, every campaign's
+        # evaluator runs behind a HardenedExecutor — per-eval deadlines,
+        # crash isolation, pathological-slowdown reclassification — so a
+        # hung or crashing config becomes a penalized FailureObservation
+        # instead of wedging a tuner worker
+        self.harden = harden
         # fired after every campaign's store publish (even a rejected
         # no-improvement one): DispatchService.attach_sync hooks this so the
         # fleet SyncAgent pushes fresh results without waiting an interval
@@ -122,8 +129,25 @@ class BackgroundTuner:
             with obs_span("tuner.campaign", kernel=kernel, signature=sig_key,
                           backend=backend, max_evals=max_evals):
                 warm_cfgs, warm_recs = self._warm_start(kernel, signature, backend)
+                executor = None
+                if self.harden is not None:
+                    import dataclasses as _dc
+
+                    from repro.guard.harden import HardenedExecutor
+
+                    policy = self.harden
+                    if policy.baseline_sec is None and warm_recs:
+                        # warm-start incumbents arm the pathological-
+                        # slowdown check with a region-realistic baseline
+                        policy = _dc.replace(
+                            policy,
+                            baseline_sec=min(o for _, o in warm_recs))
+                    executor = HardenedExecutor(
+                        evaluator, policy, parallel=self.parallel,
+                        metrics=registry, labels={"kernel": kernel})
                 result = Campaign(
-                    space, evaluator, max_evals=max_evals, learner=self.learner,
+                    space, evaluator, executor=executor,
+                    max_evals=max_evals, learner=self.learner,
                     seed=self.seed, n_initial=self.n_initial, parallel=self.parallel,
                     warm_start=warm_cfgs, warm_start_records=warm_recs).run()
             registry.add("tuner_campaigns_total", kernel=kernel)
@@ -136,11 +160,9 @@ class BackgroundTuner:
                         self.stats[k] += result.timings[k]
             if result.best is None:
                 return None
-            rec = TuningRecord(
-                kernel=kernel, signature=signature, backend=backend,
-                config=dict(result.best.config),
-                objective=float(result.best.objective),
-                n_evals=len(result.db), source="background")
+            rec = self._publishable(result, kernel, signature, backend)
+            if rec is None:
+                return None
             with obs_span("tuner.publish", kernel=kernel, signature=sig_key):
                 self.store.put(rec)
             registry.add("tuner_publish_total", kernel=kernel)
@@ -156,6 +178,23 @@ class BackgroundTuner:
         finally:
             with self._lock:
                 self._inflight.discard(key)
+
+    def _publishable(self, result, kernel, signature, backend) -> TuningRecord | None:
+        """Best evaluated config that the store will actually serve again:
+        quarantined configs (e.g. the drift-banned incumbent a re-campaign
+        just re-measured as fastest) are skipped in favor of the next-best,
+        so a drift recovery publishes a *replacement* rather than silently
+        re-proposing the banned config and leaving the key empty."""
+        self.store.refresh()  # fold tombstones appended during the campaign
+        candidates = sorted(result.db.evaluated(), key=lambda r: r.objective)
+        for cand in candidates:
+            rec = TuningRecord(
+                kernel=kernel, signature=signature, backend=backend,
+                config=dict(cand.config), objective=float(cand.objective),
+                n_evals=len(result.db), source="background")
+            if not self.store.is_quarantined(rec):
+                return rec
+        return None
 
     # -- lifecycle ---------------------------------------------------------------
 

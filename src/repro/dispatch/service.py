@@ -38,6 +38,7 @@ from repro.dispatch.lookup import Resolution, resolve
 from repro.dispatch.registry import get as get_variant
 from repro.dispatch.signature import shape_signature, signature_key
 from repro.dispatch.store import TuningStore
+from repro.guard.faults import fault_point
 from repro.obs.metrics import get_registry, summarize_histograms
 from repro.obs.trace import get_tracer
 
@@ -87,6 +88,11 @@ class DispatchService:
         }
         self._sync = None  # repro.fleet.SyncAgent, via attach_sync()
         self._kv_cache = None  # serve.PagedKVCache, via attach_kv_cache()
+        self._guard = None  # repro.guard.GuardAgent, via attach_guard()
+        # retune material per (kernel, sig_key): (signature, static items,
+        # arg shape/dtype structs) captured on the miss path so the drift
+        # watcher can re-campaign a signature without live args in hand
+        self._retune: dict[tuple, tuple] = {}
         self._exec: dict[tuple, Callable] = {}
         # jit_cached sources + stable per-name proxies: invalidate() drops the
         # compiled entry, and the proxy (which callers hold) lazily re-jits
@@ -230,12 +236,23 @@ class DispatchService:
             # the cached executable is the instrumented wrapper, so repeat
             # dispatches return the identical object and every execution
             # lands in the per-signature latency histogram
-            fn = self._instrument_execute(fn, kernel, sig_key)
+            fn = self._instrument_execute(fn, kernel, sig_key, sig=sig,
+                                          config=config, static_kw=static_kw)
+        retune_material = None
+        if self._guard is not None:
+            # shape/dtype structs, not live arrays: enough to synthesize
+            # arguments for a drift-triggered re-campaign, without pinning
+            # serving buffers in this map
+            retune_material = (sig, static_id, tuple(
+                jax.ShapeDtypeStruct(a.shape, a.dtype)
+                if hasattr(a, "shape") else a for a in args))
         # publish: executable insert, fast-map store, and the TTL sweep share
         # the final critical section
         with self._lock:
             fn = self._exec.setdefault(key, fn)
             self._fast[fast_key] = (key, time.monotonic() + self.resolve_ttl_sec)
+            if retune_material is not None:
+                self._retune[(kernel, sig_key)] = retune_material
             if len(self._fast) > self.fast_sweep_size:
                 self._sweep_fast_locked(time.monotonic())
         if self.tuner is not None and self.store is not None and self._needs_tuning(res):
@@ -246,8 +263,9 @@ class DispatchService:
         """Resolve, build, and run in one step."""
         return self.dispatch(kernel, *args, **static_kw)(*args)
 
-    def _instrument_execute(self, fn: Callable, kernel: str,
-                            sig_key: str) -> Callable:
+    def _instrument_execute(self, fn: Callable, kernel: str, sig_key: str,
+                            *, sig=None, config=None,
+                            static_kw=None) -> Callable:
         """Wrap an executable so every call records into the per-signature
         execute-latency histogram (and a trace span when tracing is on).
         The wrapper is what the executable cache stores, so the identity
@@ -256,18 +274,35 @@ class DispatchService:
         On asynchronous backends this times dispatch-to-return as the caller
         observes it — the same quantity a serving loop's own latency sees;
         it does not force a ``block_until_ready`` sync, which would
-        serialize the pipeline it is measuring."""
+        serialize the pipeline it is measuring. The exception is a
+        shadow-sampled call (epsilon fraction, attached guard only): there
+        the wrapper synchronizes to obtain a true wall time and tells it
+        into the tuning store."""
         metrics, backend = self.metrics, self.backend
 
         def timed(*a, **kw):
             tracer = get_tracer()
+            guard = self._guard
+            mode = (guard.shadow_mode(kernel, sig_key)
+                    if guard is not None else None)
             t0 = time.perf_counter()
             try:
+                fault_point("dispatch.latency", kernel=kernel,
+                            signature=sig_key)
                 if tracer.enabled:
                     with tracer.span("dispatch.execute", kernel=kernel,
                                      signature=sig_key):
-                        return fn(*a, **kw)
-                return fn(*a, **kw)
+                        out = fn(*a, **kw)
+                else:
+                    out = fn(*a, **kw)
+                if mode is not None and not any(
+                        isinstance(x, jax.core.Tracer) for x in a):
+                    # skipped under jit tracing: a trace-time "latency" is
+                    # meaningless and must not be told into the store
+                    jax.block_until_ready(out)
+                    guard.on_shadow(kernel, sig, config, static_kw, a,
+                                    time.perf_counter() - t0, mode)
+                return out
             finally:
                 metrics.observe("dispatch_execute_seconds",
                                 time.perf_counter() - t0, kernel=kernel,
@@ -308,6 +343,35 @@ class DispatchService:
         if self.tuner is not None and getattr(self.tuner, "on_publish", None) is None:
             self.tuner.on_publish = lambda rec: agent.nudge()
 
+    def attach_guard(self, agent) -> None:
+        """Bind a :class:`repro.guard.GuardAgent`: the instrumented execute
+        wrapper starts shadow-sampling an epsilon fraction of eager calls,
+        retune material is captured per signature so the drift watcher can
+        re-campaign without live args, and :meth:`telemetry` grows a
+        ``guard`` section. Attach before the first dispatch — wrappers
+        created earlier keep serving, but their signatures only gain shadow
+        sampling after an :meth:`invalidate`."""
+        self._guard = agent
+
+    def request_retune(self, kernel: str, sig_key: str) -> bool:
+        """Force a background re-campaign for a signature seen earlier by
+        :meth:`dispatch` (the drift watcher's recovery path). Returns False
+        when no tuner/store is attached or the signature was never served
+        with a guard attached."""
+        if self.tuner is None or self.store is None:
+            return False
+        with self._lock:
+            material = self._retune.get((kernel, sig_key))
+        if material is None:
+            return False
+        sig, static_id, shapes = material
+        spec = get_variant(kernel)
+        args = tuple(
+            jax.numpy.zeros(s.shape, s.dtype)
+            if isinstance(s, jax.ShapeDtypeStruct) else s for s in shapes)
+        self._enqueue_tuning(spec, kernel, sig, args, dict(static_id))
+        return True
+
     def attach_kv_cache(self, cache) -> None:
         """Bind a :class:`repro.serve.PagedKVCache`: its paged accounting
         (pages allocated vs tokens resident, occupancy) shows up in
@@ -332,6 +396,8 @@ class DispatchService:
             out.update(self._sync.lag())
         if self._kv_cache is not None:
             out["kv_cache"] = self._kv_cache.stats()
+        if self._guard is not None:
+            out["guard"] = self._guard.summary()
         out["execute_latency"] = [
             {
                 "kernel": row["labels"].get("kernel"),

@@ -22,6 +22,7 @@ continues on local state and the next cycle retries.
 from __future__ import annotations
 
 import os
+import random
 import threading
 import time
 from typing import Iterable
@@ -30,6 +31,7 @@ from repro.dispatch.signature import parse_signature_key
 from repro.dispatch.store import TuningStore
 from repro.fleet.oplog import Op, OpLog
 from repro.fleet.transport import Transport
+from repro.guard.faults import fault_point
 from repro.obs.metrics import get_registry, summarize_histograms
 from repro.obs.trace import span as obs_span
 
@@ -161,8 +163,21 @@ class Replica:
         # this process's obs registry — populated by any SyncAgent cycles run
         # here (the `serve --interval` daemon, or a one-shot `sync`); empty
         # for a process that has not synced
-        out["obs"] = summarize_histograms(
-            get_registry().snapshot(), prefix="fleet_")
+        snap = get_registry().snapshot()
+        out["obs"] = summarize_histograms(snap, prefix="fleet_")
+        # per-error-class transport failure counts and guard (drift/shadow)
+        # counters: `repro-fleet status` shows *why* sync is failing and
+        # what the resilience layer has been doing, not just that it ran
+        out["counters"] = {}
+        for c in snap.get("counters", []):
+            name = c["name"]
+            if name == "fleet_transport_errors":
+                kind = c["labels"].get("kind", "")
+                row = out["counters"].setdefault(name, {})
+                row[kind] = row.get(kind, 0) + int(c["value"])
+            elif name.startswith("guard_"):
+                out["counters"][name] = (
+                    out["counters"].get(name, 0) + int(c["value"]))
         return out
 
 
@@ -177,16 +192,31 @@ class SyncAgent:
         *,
         interval_sec: float = 30.0,
         max_errors: int = 20,
+        max_backoff_sec: float | None = None,
+        backoff_jitter: float = 0.25,
+        rng=None,
     ):
         self.replica = replica
         self.transport = transport
         self.interval_sec = interval_sec
+        # consecutive transport failures back the loop off exponentially
+        # (doubling per failure, capped, with multiplicative jitter so a
+        # fleet of replicas behind one dead peer doesn't retry in lockstep)
+        # instead of hammering a dead peer every interval
+        self.max_backoff_sec = (max_backoff_sec if max_backoff_sec is not None
+                                else interval_sec * 32)
+        self.backoff_jitter = backoff_jitter
+        self._rng = rng if rng is not None else random.Random()
         # per-cycle pull/merge/push durations accumulate here (flat view)
         # and into the obs registry's fleet_{pull,merge,push,cycle}_seconds
         # histograms, labeled by host
         self.stats = {"cycles": 0, "sync_applied": 0, "sync_published": 0,
                       "sync_errors": 0, "ops_pending": 0, "last_sync": 0.0,
-                      "pull_sec": 0.0, "merge_sec": 0.0, "push_sec": 0.0}
+                      "pull_sec": 0.0, "merge_sec": 0.0, "push_sec": 0.0,
+                      # error-class -> count, e.g. {"ConnectionError": 4}:
+                      # *why* sync is failing, not just that it is
+                      "transport_errors": {},
+                      "consecutive_failures": 0, "backoff_sec": 0.0}
         # monotonic companion to stats["last_sync"] (which stays wall-clock
         # for display): in-process age/lag math must not step under NTP
         self._last_sync_mono = 0.0
@@ -217,6 +247,8 @@ class SyncAgent:
         try:
             t0 = time.perf_counter()
             with obs_span("fleet.pull", host=host):
+                fault_point("transport.partition", op="pull", host=host)
+                fault_point("transport.flake", op="pull", host=host)
                 pulled = self.transport.pull(self.replica.oplog)
             pull_sec = time.perf_counter() - t0
             t0 = time.perf_counter()
@@ -225,6 +257,8 @@ class SyncAgent:
             merge_sec = time.perf_counter() - t0
             t0 = time.perf_counter()
             with obs_span("fleet.push", host=host):
+                fault_point("transport.partition", op="push", host=host)
+                fault_point("transport.flake", op="push", host=host)
                 published = self.transport.push(self.replica.oplog)
             push_sec = time.perf_counter() - t0
             pending = self.transport.pending(self.replica.oplog)
@@ -233,8 +267,13 @@ class SyncAgent:
         except Exception as e:  # noqa: BLE001 — anti-entropy must outlive peers
             self._record_durations(registry, host, pull_sec, merge_sec,
                                    push_sec, time.perf_counter() - t_cycle)
+            kind = type(e).__name__
+            registry.add("fleet_transport_errors", kind=kind, host=host)
             with self._lock:
                 self.stats["sync_errors"] += 1
+                errs = self.stats["transport_errors"]
+                errs[kind] = errs.get(kind, 0) + 1
+                self.stats["consecutive_failures"] += 1
                 self.errors.append(e)
                 del self.errors[:-self._max_errors]
             return {"applied": applied, "published": published,
@@ -247,6 +286,8 @@ class SyncAgent:
             self.stats["sync_applied"] += applied
             self.stats["sync_published"] += published
             self.stats["ops_pending"] = pending
+            self.stats["consecutive_failures"] = 0
+            self.stats["backoff_sec"] = 0.0
             self.stats["last_sync"] = time.time()  # wall-clock, display only
             self._last_sync_mono = time.monotonic()
             self.stats["pull_sec"] += pull_sec
@@ -281,7 +322,21 @@ class SyncAgent:
                     round(time.monotonic() - last_mono, 3)
                     if last_mono else float("inf")),
                 "sync_errors": self.stats["sync_errors"],
+                "sync_transport_errors": dict(self.stats["transport_errors"]),
+                "sync_consecutive_failures": self.stats["consecutive_failures"],
+                "sync_backoff_sec": self.stats["backoff_sec"],
             }
+
+    def _backoff_delay(self, consecutive_failures: int) -> float:
+        """Next wait after ``consecutive_failures`` straight failed cycles:
+        exponential (doubling) from ``interval_sec``, capped at
+        ``max_backoff_sec``, with up to ``backoff_jitter`` multiplicative
+        jitter to de-synchronize a fleet retrying one dead peer."""
+        if consecutive_failures <= 0:
+            return self.interval_sec
+        base = min(self.interval_sec * (2.0 ** min(consecutive_failures - 1, 16)),
+                   self.max_backoff_sec)
+        return base * (1.0 + self.backoff_jitter * self._rng.random())
 
     # -- lifecycle ---------------------------------------------------------------
 
@@ -300,8 +355,18 @@ class SyncAgent:
 
     def _run(self) -> None:
         while not self._stopping.is_set():
-            self.sync_once()
-            self._wake.wait(self.interval_sec)
+            out = self.sync_once()
+            if "error" in out:
+                with self._lock:
+                    failures = self.stats["consecutive_failures"]
+                delay = self._backoff_delay(failures)
+                with self._lock:
+                    self.stats["backoff_sec"] = delay
+            else:
+                delay = self.interval_sec
+            # a nudge() still wakes a backed-off loop immediately: local
+            # publishes should not wait out a dead peer's backoff window
+            self._wake.wait(delay)
             self._wake.clear()
 
     def stop(self, wait: bool = True) -> None:

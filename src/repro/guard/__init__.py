@@ -1,0 +1,40 @@
+"""repro.guard: resilience layer — hardened evaluation, shadow evaluation,
+drift/regression watch, and deterministic fault injection.
+
+Imports are lazy (PEP 562) so that low-level modules (e.g.
+``repro.core.jsonl``) can import ``repro.guard.faults`` without pulling
+in the jax-dependent harden/shadow/watch machinery.
+"""
+
+_EXPORTS = {
+    "FaultInjected": "faults",
+    "Fault": "faults",
+    "inject": "faults",
+    "fault_point": "faults",
+    "fault_hit": "faults",
+    "install_env_faults": "faults",
+    "clear_faults": "faults",
+    "active_faults": "faults",
+    "CATALOG": "faults",
+    "FailureObservation": "harden",
+    "HardenPolicy": "harden",
+    "HardenedExecutor": "harden",
+    "ShadowPolicy": "shadow",
+    "ShadowEvaluator": "shadow",
+    "WatchPolicy": "watch",
+    "GuardAgent": "watch",
+    "window_stats": "watch",
+    "replay_decisions": "watch",
+    "guard_counters": "watch",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.guard' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f"repro.guard.{mod}"), name)

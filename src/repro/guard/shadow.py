@@ -1,0 +1,176 @@
+"""Shadow evaluation: live traffic as free tuning hardware.
+
+For an epsilon fraction of eager dispatch executions the instrumented
+wrapper blocks until the result is ready and hands the true wall time to
+:meth:`ShadowEvaluator.on_shadow`, which ``tell``s it into the
+:class:`TuningStore` (the store's strict-improvement ``put`` is the
+accept test). A sub-fraction of those shadow samples additionally builds
+and times a *challenger* config — a store neighbor or a seeded space
+sample — on the live arguments, promoting it (put + hot-swap
+invalidate) when it beats the incumbent.
+
+Sampling is deterministic (per-signature call counters, not RNG): every
+``round(1/epsilon)``-th execution is shadowed, every
+``round(1/challenger_fraction)``-th shadow tries a challenger. Shadowing
+never breaks serving: every failure path is swallowed into a counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ShadowPolicy", "ShadowEvaluator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShadowPolicy:
+    epsilon: float = 0.01             # fraction of executions shadow-timed
+    challenger_fraction: float = 0.1  # fraction of shadow samples that race a challenger
+    challenger_neighbors: int = 3     # store neighbors considered as challengers
+    seed: int = 0                     # space-sample challenger stream
+
+    def shadow_period(self) -> int:
+        return max(1, round(1.0 / self.epsilon)) if self.epsilon > 0 else 0
+
+    def challenger_period(self) -> int:
+        return (max(1, round(1.0 / self.challenger_fraction))
+                if self.challenger_fraction > 0 else 0)
+
+
+class ShadowEvaluator:
+    def __init__(self, service, policy: ShadowPolicy = ShadowPolicy()):
+        self.service = service
+        self.policy = policy
+        self._period = policy.shadow_period()           # hoisted off the hot path
+        self._challenger_period = policy.challenger_period()
+        self._lock = threading.Lock()
+        self._calls: Dict[Tuple[str, str], int] = {}   # per-signature executions
+        self._samples: Dict[Tuple[str, str], int] = {}  # per-signature shadows
+        self._rng = np.random.default_rng(policy.seed)
+        self.stats: Dict[str, int] = {
+            "shadow_evals": 0, "shadow_tells": 0, "shadow_skipped": 0,
+            "shadow_errors": 0, "challenger_evals": 0, "challenger_promoted": 0,
+            "challenger_infeasible": 0,
+        }
+
+    # -- sampling decision (serving hot path: every dispatch execution pays
+    # this, so it is deliberately lock-free — each get/set is atomic under
+    # the GIL, and a racing increment can at worst lose a count, which only
+    # nudges *when* the next shadow sample lands, never correctness; the
+    # lock stays on the cold paths (stats, challenger RNG))
+    def shadow_mode(self, kernel: str, sig_key: str) -> Optional[str]:
+        """None (don't shadow) | "observe" | "challenger" for this call."""
+        period = self._period
+        if period == 0:
+            return None
+        k = (kernel, sig_key)
+        n = self._calls.get(k, 0) + 1
+        self._calls[k] = n
+        if n % period != 0:
+            return None
+        s = self._samples.get(k, 0) + 1
+        self._samples[k] = s
+        ch = self._challenger_period
+        return "challenger" if (ch and s % ch == 0) else "observe"
+
+    # -- the measurement sink ---------------------------------------------
+    def on_shadow(self, kernel: str, sig, config: dict, static_kw: dict,
+                  args: tuple, measured_sec: float, mode: str) -> None:
+        """Handle one shadow measurement. Never raises."""
+        svc = self.service
+        try:
+            import jax
+
+            if any(isinstance(a, jax.core.Tracer) for a in args):
+                # jit tracing of a serve step, not a real execution: a
+                # trace-time measurement is meaningless and a challenger
+                # build inside a trace would be catastrophic
+                self._count("shadow_skipped")
+                return
+            self._count("shadow_evals")
+            svc.metrics.add("guard_shadow_evals_total", kernel=kernel)
+            from repro.dispatch.store import TuningRecord
+
+            if svc.store is not None and self._tell(TuningRecord(
+                    kernel=kernel, signature=tuple(sig), backend=svc.backend,
+                    config=dict(config), objective=float(measured_sec),
+                    n_evals=1, source="shadow")):
+                self._count("shadow_tells")
+            if mode == "challenger":
+                self._challenge(kernel, sig, config, static_kw, args)
+        except Exception:  # noqa: BLE001 — shadowing must never break serving
+            self._count("shadow_errors")
+            svc.metrics.add("guard_shadow_errors_total", kernel=kernel)
+
+    def _tell(self, rec) -> bool:
+        return bool(self.service.store.put(rec))
+
+    # -- challenger path ---------------------------------------------------
+    def _pick_challenger(self, kernel: str, sig, config: dict) -> Optional[dict]:
+        from repro.core.space import config_key
+        from repro.dispatch.registry import get as get_variant
+        from repro.dispatch.signature import signature_distance
+
+        svc = self.service
+        incumbent = config_key(config)
+        if svc.store is not None:
+            ranked = sorted(
+                (r for r in svc.store.records(kernel=kernel, backend=svc.backend)
+                 if signature_distance(tuple(sig), r.signature) != float("inf")),
+                key=lambda r: signature_distance(tuple(sig), r.signature))
+            for r in ranked[: self.policy.challenger_neighbors]:
+                if config_key(r.config) != incumbent:
+                    return dict(r.config)
+        space = get_variant(kernel).space(svc.target)
+        for _ in range(8):  # resample past the incumbent
+            cand = space.sample_configuration(self._rng)
+            if config_key(cand) != incumbent:
+                return cand
+        return None
+
+    def _challenge(self, kernel: str, sig, config: dict, static_kw: dict,
+                   args: tuple) -> None:
+        import jax
+
+        from repro.analyze.feasibility import check_config
+        from repro.dispatch.registry import get as get_variant
+        from repro.dispatch.store import TuningRecord
+
+        svc = self.service
+        cand = self._pick_challenger(kernel, sig, config)
+        if cand is None:
+            return
+        verdict = check_config(kernel, cand, signature=tuple(sig),
+                               target=svc.target)
+        if not verdict.ok:
+            self._count("challenger_infeasible")
+            return
+        spec = get_variant(kernel)
+        built = spec.builder(cand, **static_kw)
+        fn = jax.jit(built) if svc.jit else built
+        jax.block_until_ready(fn(*args))  # compile + warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        self._count("challenger_evals")
+        svc.metrics.add("guard_challenger_evals_total", kernel=kernel)
+        if svc.store is not None and self._tell(TuningRecord(
+                kernel=kernel, signature=tuple(sig), backend=svc.backend,
+                config=dict(cand), objective=float(dt), n_evals=1,
+                source="shadow_challenger")):
+            self._count("challenger_promoted")
+            svc.metrics.add("guard_challenger_promoted_total", kernel=kernel)
+            svc.invalidate(kernel, tuple(sig))
+
+    def _count(self, key: str) -> None:
+        with self._lock:
+            self.stats[key] += 1
+
+    def snapshot_stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return dict(self.stats)

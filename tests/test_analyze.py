@@ -409,6 +409,85 @@ def test_lint_rep104_unowned_thread():
     """) == []
 
 
+def test_lint_rep105_runloop_swallow():
+    bad = """
+    import threading
+
+    class Agent:
+        def start(self):
+            self._t = threading.Thread(target=self._run, daemon=True)
+            self._t.start()
+
+        def _run(self):
+            while True:
+                try:
+                    self.step()
+                except Exception:
+                    pass
+    """
+    assert "REP105" in _codes(bad)
+    # counting the failure is accounting enough: the daemon stays observable
+    assert _codes(bad.replace("pass", 'self.stats["errors"] += 1')) == []
+    # so is re-raising after cleanup
+    assert _codes(bad.replace("pass", "raise")) == []
+    # a narrow except is a deliberate decision, not a swallow
+    assert _codes(bad.replace("except Exception:", "except ValueError:")) == []
+
+
+def test_lint_rep105_reaches_helpers_called_from_the_loop():
+    bad = """
+    import threading
+
+    class Agent:
+        def start(self):
+            threading.Thread(target=self._run, daemon=True).start()
+
+        def _run(self):
+            while True:
+                self._tick()
+
+        def _tick(self):
+            try:
+                self.sync()
+            except Exception:
+                return None
+    """
+    assert "REP105" in _codes(bad)
+
+
+def test_lint_rep105_ignores_loops_outside_threads():
+    src = """
+    class Loader:
+        def load_all(self, paths):
+            out = []
+            for p in paths:
+                try:
+                    out.append(self.parse(p))
+                except Exception:
+                    continue
+            return out
+    """
+    assert _codes(src) == []
+
+
+def test_lint_rep105_counter_call_accounts():
+    src = """
+    import threading
+
+    class Agent:
+        def start(self):
+            threading.Thread(target=self._run, daemon=True).start()
+
+        def _run(self):
+            while True:
+                try:
+                    self.step()
+                except Exception:
+                    self.registry.add("errors_total")
+    """
+    assert _codes(src) == []
+
+
 def test_lint_pragma_allowlists_a_finding():
     src = """
     import time

@@ -1,0 +1,610 @@
+"""repro.guard chaos suite: deterministic fault injection, hardened
+evaluation (deadline / crash isolation / pathological slowdown), shadow
+evaluation, the drift watcher, crash-consistency of every durable log, and
+the SyncAgent's transport-failure backoff.
+
+The acceptance story this file pins: every injected failure *degrades* —
+a hung evaluator times out as a FailureObservation without stalling its
+campaign, an injected latency regression is auto-quarantined with
+fallback to the default config, a torn write loses no durable record —
+and with guard features disabled, fixed-seed campaign trajectories are
+bit-identical to the pre-guard engine.
+"""
+
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import EvalResult
+from repro.core.database import FAILED, OK
+from repro.core.jsonl import append_jsonl, iter_jsonl_tail
+from repro.core.plopper import PENALTY
+from repro.core.space import ConfigurationSpace, Ordinal
+from repro.dispatch import DispatchService, TuningRecord, TuningStore
+from repro.dispatch.registry import register
+from repro.engine import Campaign
+from repro.guard import (
+    CATALOG,
+    FailureObservation,
+    FaultInjected,
+    GuardAgent,
+    HardenPolicy,
+    HardenedExecutor,
+    ShadowPolicy,
+    WatchPolicy,
+    clear_faults,
+    fault_point,
+    inject,
+    install_env_faults,
+    replay_decisions,
+    window_stats,
+)
+from repro.guard.watch import _decide, _DriftState
+from repro.obs.metrics import MetricsRegistry
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_faults():
+    clear_faults()
+    yield
+    clear_faults()
+
+
+def _space(seed=1234):
+    cs = ConfigurationSpace(seed=seed)
+    cs.add_hyperparameter(Ordinal("s", (1, 2, 4, 8, 16, 32), default=1))
+    cs.add_hyperparameter(Ordinal("t", (1, 2, 4), default=1))
+    return cs
+
+
+def _det_eval(cfg):
+    # deterministic "latency": minimized at s=32, t=4; no wall-clock noise
+    return EvalResult(1.0 / (cfg["s"] * cfg["t"]), True, {})
+
+
+def _toy_space(target="host", seed=1234):
+    cs = ConfigurationSpace(seed=seed)
+    cs.add_hyperparameter(Ordinal("s", (1, 2, 4, 8, 16, 32), default=1))
+    return cs
+
+
+register("toy_scale", builder=lambda cfg: lambda x: x * cfg["s"],
+         space=_toy_space,
+         make_evaluator=lambda factory: (
+             lambda cfg: EvalResult(1.0 / cfg["s"], True, {})))
+
+
+# ---------------------------------------------------------------------------
+# fault harness
+# ---------------------------------------------------------------------------
+
+
+def test_fault_point_noop_when_unarmed():
+    assert fault_point("eval.crash") is False
+    assert fault_point("no.such.point") is False
+
+
+def test_inject_times_and_every_are_deterministic():
+    with inject("eval.crash", times=2) as fault:
+        for _ in range(2):
+            with pytest.raises(FaultInjected):
+                fault_point("eval.crash")
+        assert fault_point("eval.crash") is False  # budget spent
+        assert fault.fired == 2
+    assert fault_point("eval.crash") is False  # disarmed on exit
+
+    with inject("dispatch.latency", every=3, delay_sec=0.0):
+        fired = [fault_point("dispatch.latency") for _ in range(6)]
+    assert fired == [False, False, True, False, False, True]
+
+
+def test_inject_where_filters_by_context_substring():
+    with inject("dispatch.latency", delay_sec=0.0, where={"kernel": "syr2k"}):
+        assert fault_point("dispatch.latency", kernel="matmul") is False
+        assert fault_point("dispatch.latency", kernel="syr2k") is True
+
+
+def test_env_spec_parsing():
+    n = install_env_faults(
+        "eval.crash:times=1;dispatch.latency:delay=0.001,every=2,"
+        "where.kernel=toy")
+    assert n == 2
+    with pytest.raises(FaultInjected):
+        fault_point("eval.crash")
+    assert fault_point("eval.crash") is False
+    assert fault_point("dispatch.latency", kernel="toy") is False  # hit 1 of 2
+    assert fault_point("dispatch.latency", kernel="toy") is True
+    clear_faults()
+    assert fault_point("dispatch.latency", kernel="toy") is False
+
+
+def test_catalog_covers_the_documented_points():
+    assert {"eval.hang", "eval.crash", "eval.slow", "dispatch.latency",
+            "transport.flake", "transport.partition",
+            "store.torn_write"} <= set(CATALOG)
+
+
+# ---------------------------------------------------------------------------
+# hardened evaluation
+# ---------------------------------------------------------------------------
+
+
+def test_crash_becomes_failure_observation_with_reason_code():
+    def boom(cfg):
+        raise ValueError("kaboom")
+
+    ex = HardenedExecutor(boom, HardenPolicy())
+    res = ex.submit({"s": 1}).result()
+    assert res.ok is False
+    assert res.objective == PENALTY
+    assert res.info["failure"] == "exception"
+    assert res.info["reason"] == "eval_crash:ValueError"
+    assert ex.stats["crashes"] == 1
+
+
+def test_campaign_survives_crashing_evaluator_and_penalizes_surrogate():
+    calls = []
+
+    def flaky(cfg):
+        calls.append(dict(cfg))
+        if cfg["s"] >= 16:  # a "region" of the space crashes
+            raise RuntimeError("bad tile")
+        return _det_eval(cfg)
+
+    ex = HardenedExecutor(flaky, HardenPolicy(), metrics=MetricsRegistry())
+    result = Campaign(_space(), executor=ex, max_evals=12, seed=7,
+                      n_initial=4).run()
+    db = result.db
+    assert len(db) == 12  # every crash consumed budget as data, no retries
+    failed = [r for r in db.records if r.status == FAILED]
+    assert failed, "the crashing region must appear as FAILED records"
+    for r in failed:
+        assert r.objective == PENALTY  # the surrogate sees the penalty
+        assert r.info["reason"] == "eval_crash:RuntimeError"
+    # the campaign's best is a real measurement from the healthy region
+    assert result.best is not None and result.best.config["s"] < 16
+
+
+def test_hung_evaluator_times_out_without_stalling_campaign():
+    def ev(cfg):
+        return _det_eval(cfg)
+
+    with inject("eval.hang", times=1, hang_max_sec=30.0):
+        ex = HardenedExecutor(ev, HardenPolicy(deadline_sec=0.25))
+        t0 = time.monotonic()
+        result = Campaign(_space(), executor=ex, max_evals=6, seed=7,
+                          n_initial=3).run()
+        wall = time.monotonic() - t0
+    assert wall < 10.0, "a hung evaluation must not stall the campaign"
+    db = result.db
+    assert len(db) == 6
+    timeouts = [r for r in db.records
+                if r.status == FAILED and r.info.get("failure") == "timeout"]
+    assert len(timeouts) == 1
+    assert timeouts[0].info["reason"] == "eval_timeout:0.25s"
+    # timeout penalty is region-informative (deadline x scale), not PENALTY
+    assert timeouts[0].objective == pytest.approx(0.25 * 10.0)
+    ok = [r for r in db.records if r.status == OK]
+    assert len(ok) == 5, "remaining evaluations must complete normally"
+
+
+def test_pathological_slowdown_reclassified_keeping_measurement():
+    def ev(cfg):
+        return EvalResult(5.0 if cfg["s"] == 1 else 0.001, True, {})
+
+    ex = HardenedExecutor(ev, HardenPolicy(baseline_sec=0.001,
+                                           slowdown_factor=50.0))
+    res = ex.submit({"s": 1, "t": 1}).result()
+    assert res.ok is False
+    assert res.info["failure"] == "pathological"
+    assert res.info["reason"].startswith("pathological_slowdown:")
+    assert res.objective == 5.0  # the measurement is already its own penalty
+    assert ex.submit({"s": 2, "t": 1}).result().ok is True
+
+
+def test_fixed_seed_trajectory_bit_identical_with_guard_disabled():
+    """The acceptance pin: a HardenedExecutor with no deadline and
+    parallel=1 (guard features effectively off) reproduces the plain
+    inline engine's trajectory bit for bit."""
+    base = Campaign(_space(), _det_eval, max_evals=14, seed=42,
+                    n_initial=4).run()
+    hardened = Campaign(_space(), executor=HardenedExecutor(
+        _det_eval, HardenPolicy()), max_evals=14, seed=42, n_initial=4).run()
+    assert [(r.config, r.objective, r.status) for r in base.db.records] == \
+           [(r.config, r.objective, r.status) for r in hardened.db.records]
+    assert base.best.config == hardened.best.config
+    assert base.best.objective == hardened.best.objective
+
+
+# ---------------------------------------------------------------------------
+# shadow evaluation
+# ---------------------------------------------------------------------------
+
+
+def _service(tmp_path, **kw):
+    store = TuningStore(str(tmp_path / "store"))
+    return DispatchService(store, metrics=MetricsRegistry(), **kw), store
+
+
+def test_shadow_eval_tells_live_measurement_into_store(tmp_path):
+    svc, store = _service(tmp_path)
+    # absurdly slow stored objective: the first live measurement improves it
+    store.put(TuningRecord("toy_scale", ((4,),), "host", {"s": 2}, 10.0))
+    guard = GuardAgent(svc, shadow=ShadowPolicy(epsilon=1.0,
+                                                challenger_fraction=0.0))
+    svc.attach_guard(guard)
+    x = np.arange(4.0)
+    fn = svc.dispatch("toy_scale", x)
+    for _ in range(3):
+        np.testing.assert_array_equal(np.asarray(fn(x)), x * 2)
+    stats = guard.shadow.snapshot_stats()
+    assert stats["shadow_evals"] >= 1
+    assert stats["shadow_tells"] >= 1
+    rec = store.get("toy_scale", ((4,),), "host")
+    assert rec.source == "shadow"
+    assert rec.objective < 10.0  # sharpened by live traffic
+    assert rec.config == {"s": 2}
+
+
+def test_shadow_challenger_races_and_counts(tmp_path):
+    svc, store = _service(tmp_path)
+    store.put(TuningRecord("toy_scale", ((4,),), "host", {"s": 2}, 10.0))
+    guard = GuardAgent(svc, shadow=ShadowPolicy(epsilon=1.0,
+                                                challenger_fraction=1.0,
+                                                seed=3))
+    svc.attach_guard(guard)
+    x = np.arange(4.0)
+    fn = svc.dispatch("toy_scale", x)
+    for _ in range(4):
+        fn(x)
+    stats = guard.shadow.snapshot_stats()
+    assert stats["challenger_evals"] >= 1
+    assert stats["shadow_errors"] == 0
+
+
+def test_shadow_epsilon_zero_never_samples(tmp_path):
+    svc, store = _service(tmp_path)
+    store.put(TuningRecord("toy_scale", ((4,),), "host", {"s": 2}, 10.0))
+    guard = GuardAgent(svc, shadow=ShadowPolicy(epsilon=0.0))
+    svc.attach_guard(guard)
+    x = np.arange(4.0)
+    fn = svc.dispatch("toy_scale", x)
+    for _ in range(5):
+        fn(x)
+    assert guard.shadow.snapshot_stats()["shadow_evals"] == 0
+    assert store.get("toy_scale", ((4,),), "host").objective == 10.0
+
+
+# ---------------------------------------------------------------------------
+# drift watch
+# ---------------------------------------------------------------------------
+
+
+class _StubTuner:
+    """Records re-campaign submissions without running any."""
+
+    def __init__(self):
+        self.submitted = []
+        self.stats = {}
+
+    def submit(self, kernel, signature, backend, **kw):
+        self.submitted.append((kernel, signature, backend))
+        return object()
+
+
+def test_drift_quarantines_falls_back_and_requests_retune(tmp_path):
+    svc, store = _service(tmp_path, tuner=_StubTuner())
+    store.put(TuningRecord("toy_scale", ((4,),), "host", {"s": 2}, 1e-4))
+    guard = GuardAgent(svc, watch=WatchPolicy(
+        drift_factor=50.0, hysteresis=2, cooldown_sec=0.0, min_samples=4))
+    svc.attach_guard(guard)
+    x = np.arange(4.0)
+    fn = svc.dispatch("toy_scale", x)
+
+    for _ in range(5):
+        fn(x)
+    assert guard.check_once() == []  # first check only sets the window base
+    for _ in range(5):
+        fn(x)
+    assert guard.check_once() == []  # healthy window: no breach
+
+    with inject("dispatch.latency", delay_sec=0.02):  # 200x the baseline
+        for _ in range(5):
+            fn(x)
+        assert guard.check_once() == []  # breach 1 of 2: hysteresis holds
+        for _ in range(5):
+            fn(x)
+        decisions = guard.check_once()  # breach 2: sustained drift -> act
+
+    assert len(decisions) == 1
+    d = decisions[0]
+    assert d["action"] == "quarantine"
+    assert d["reason"].startswith("drift:")
+    assert d["config"] == {"s": 2}
+    assert d["retune_requested"] is True
+    # the ban is durable and machine-readable
+    quars = store.quarantines("toy_scale")
+    assert len(quars) == 1 and quars[0]["reason"].startswith("drift:")
+    # a re-campaign for the exact live signature was enqueued immediately
+    assert svc.tuner.submitted == [("toy_scale", ((4,),), "host")]
+    # serving degraded: next dispatch resolves the default config
+    before = svc.stats["store_default"]
+    fn2 = svc.dispatch("toy_scale", x)
+    assert fn2 is not fn
+    assert svc.stats["store_default"] == before + 1
+    np.testing.assert_array_equal(np.asarray(fn2(x)), x * 1)  # default s=1
+    assert guard.stats["quarantines"] == 1
+    assert guard.stats["fallbacks"] == 1
+
+
+def test_drift_hysteresis_and_cooldown_pure_policy():
+    policy = WatchPolicy(drift_factor=3.0, hysteresis=2, cooldown_sec=100.0,
+                         min_samples=1)
+    key = ("k", "4", "host")
+    breach = {key: {"count": 10, "sum": 1.0, "p50": 1.0, "p99": 2.0}}
+    healthy = {key: {"count": 10, "sum": 0.001, "p50": 1e-4, "p99": 1e-4}}
+    baselines = {key: 1e-3}
+    states = {}
+    # one breach window is noise, not drift
+    assert _decide(breach, baselines, states, policy, now=0.0) == []
+    # a healthy window resets the streak
+    assert _decide(healthy, baselines, states, policy, now=1.0) == []
+    assert _decide(breach, baselines, states, policy, now=2.0) == []
+    # two consecutive breaches fire exactly once...
+    got = _decide(breach, baselines, states, policy, now=3.0)
+    assert len(got) == 1 and got[0]["reason"] == "drift:1000.0x"
+    # ...and the cooldown suppresses a re-fire until it expires
+    _decide(breach, baselines, states, policy, now=4.0)
+    assert _decide(breach, baselines, states, policy, now=5.0) == []
+    assert len(_decide(breach, baselines, states, policy, now=103.0)) == 1
+
+
+def test_unknown_baseline_is_ignored():
+    policy = WatchPolicy(min_samples=1, hysteresis=1)
+    windows = {("k", "4", "host"): {"count": 5, "sum": 5.0, "p50": 1.0,
+                                    "p99": 1.0}}
+    assert _decide(windows, {}, {}, policy, now=0.0) == []
+
+
+def test_window_stats_are_deltas_not_cumulative():
+    reg = MetricsRegistry()
+    for _ in range(10):
+        reg.observe("dispatch_execute_seconds", 1e-4, kernel="k",
+                    signature="4", backend="host")
+    snap1 = reg.snapshot()
+    for _ in range(10):
+        reg.observe("dispatch_execute_seconds", 0.05, kernel="k",
+                    signature="4", backend="host")
+    snap2 = reg.snapshot()
+    cumulative = window_stats(None, snap2)[("k", "4", "host")]
+    window = window_stats(snap1, snap2)[("k", "4", "host")]
+    assert cumulative["count"] == 20 and window["count"] == 10
+    # the fresh regression dominates the window p50 but not the cumulative
+    assert window["p50"] > 10 * cumulative["p50"]
+
+
+def test_replay_decisions_from_snapshot_log():
+    reg = MetricsRegistry()
+    lab = dict(kernel="k", signature="4", backend="host")
+    for _ in range(8):
+        reg.observe("dispatch_execute_seconds", 1e-4, **lab)
+    snaps = [{"snapshot": reg.snapshot()}]
+    for _ in range(2):  # two drifting windows
+        for _ in range(8):
+            reg.observe("dispatch_execute_seconds", 0.05, **lab)
+        snaps.append({"snapshot": reg.snapshot()})
+    got = replay_decisions(
+        snaps, {("k", "4", "host"): 1e-4},
+        WatchPolicy(drift_factor=3.0, hysteresis=2, cooldown_sec=0.0,
+                    min_samples=4))
+    assert len(got) == 1
+    assert got[0]["window_index"] == 2
+    assert got[0]["reason"].startswith("drift:")
+
+
+def test_telemetry_guard_section(tmp_path):
+    svc, store = _service(tmp_path)
+    guard = GuardAgent(svc, shadow=ShadowPolicy(epsilon=0.5))
+    svc.attach_guard(guard)
+    guard.check_once()
+    tel = svc.telemetry()
+    assert tel["guard"]["checks"] == 1
+    assert tel["guard"]["quarantines"] == 0
+    assert "shadow" in tel["guard"]
+    assert tel["guard"]["watching"]["hysteresis"] == guard.watch.hysteresis
+
+
+def test_guard_agent_thread_lifecycle(tmp_path):
+    svc, _store = _service(tmp_path)
+    guard = GuardAgent(svc, watch=WatchPolicy(interval_sec=0.05))
+    guard.start()
+    deadline = time.monotonic() + 5.0
+    while guard.stats["checks"] < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    guard.stop()
+    assert guard.stats["checks"] >= 2
+    assert guard.stats["watch_errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# crash consistency: torn writes lose no durable record
+# ---------------------------------------------------------------------------
+
+
+def test_torn_write_fault_point_tears_and_raises(tmp_path):
+    p = str(tmp_path / "log.jsonl")
+    append_jsonl(p, {"i": 0})
+    with inject("store.torn_write", times=1):
+        with pytest.raises(FaultInjected):
+            append_jsonl(p, {"i": 1})
+    # the torn fragment has no newline: the tail reader stops before it
+    assert [o for o, _ in iter_jsonl_tail(p, 0)] == [{"i": 0}]
+
+
+def test_store_recovers_all_durable_records_after_torn_write(tmp_path):
+    path = str(tmp_path / "store")
+    recs = [TuningRecord("toy_scale", ((4 * (i + 1),),), "host",
+                         {"s": 2}, 0.5 + i) for i in range(4)]
+    # kill the writer at every append position in turn
+    for kill_at in range(1, 4):
+        store = TuningStore(path + str(kill_at))
+        for rec in recs[:kill_at]:
+            assert store.put(rec)
+        with inject("store.torn_write", times=1):
+            with pytest.raises(FaultInjected):
+                store.put(recs[kill_at])
+        # a fresh process view: every record durable before the crash
+        # survives, the torn line is isolated, and writes still work
+        reopened = TuningStore(path + str(kill_at))
+        assert len(reopened.records()) == kill_at
+        assert reopened.put(recs[kill_at])
+        assert len(reopened.records()) == kill_at + 1
+
+
+def test_oplog_heals_missing_op_after_torn_write(tmp_path):
+    from repro.fleet import Replica
+
+    path = str(tmp_path / "store")
+    store = TuningStore(path)
+    rep = Replica(store)
+    assert store.put(TuningRecord("toy_scale", ((4,),), "host", {"s": 2}, 0.5))
+    ops_before = len(rep.oplog)
+    # the op-sink append dies: store accepted the record, oplog missed it
+    with inject("store.torn_write", times=1, where={"path": "fleet"}):
+        with pytest.raises(FaultInjected):
+            store.put(TuningRecord("toy_scale", ((8,),), "host", {"s": 4},
+                                   0.25))
+    assert len(store.records()) == 2  # the record itself IS durable
+    # crash-restart: Replica bootstrap re-derives the missing op from the
+    # store (ensure_put), so replication never loses the durable record
+    store2 = TuningStore(path)
+    rep2 = Replica(store2)
+    assert len(store2.records()) == 2
+    assert len(rep2.oplog) > ops_before
+    keys = {k[:3] for k in rep2.oplog.merge_keys()}
+    assert ("toy_scale", "8", "host") in keys
+
+
+def test_obs_snapshot_log_recovers_after_torn_write(tmp_path):
+    from repro.obs.export import read_snapshot_file, write_snapshot
+
+    reg = MetricsRegistry()
+    reg.add("guard_checks_total")
+    p = str(tmp_path / "obs.jsonl")
+    for _ in range(3):
+        write_snapshot(p, registry=reg)
+    with inject("store.torn_write", times=1):
+        with pytest.raises(FaultInjected):
+            write_snapshot(p, registry=reg)
+    assert len(read_snapshot_file(p, merge=False)) == 3
+    write_snapshot(p, registry=reg)  # repair_torn_tail isolates the fragment
+    lines = read_snapshot_file(p, merge=False)
+    assert len(lines) == 4
+    merged = read_snapshot_file(p)
+    assert merged["counters"][0]["name"] == "guard_checks_total"
+
+
+# ---------------------------------------------------------------------------
+# SyncAgent: transport failure classification + backoff
+# ---------------------------------------------------------------------------
+
+
+def _sync_agent(tmp_path, **kw):
+    from repro.fleet import Replica, SyncAgent
+    from repro.fleet.transport import transport_from_spec
+
+    store = TuningStore(str(tmp_path / "store"))
+    transport = transport_from_spec("file:" + str(tmp_path / "shared"))
+    return SyncAgent(Replica(store), transport, **kw)
+
+
+def test_transport_flake_is_classified_and_heals(tmp_path):
+    agent = _sync_agent(tmp_path, interval_sec=0.1)
+    with inject("transport.flake"):  # one ConnectionError, then healthy
+        out = agent.sync_once()
+        assert "error" in out and "ConnectionError" in out["error"]
+    assert agent.stats["transport_errors"] == {"ConnectionError": 1}
+    assert agent.stats["consecutive_failures"] == 1
+    out = agent.sync_once()
+    assert "error" not in out
+    assert agent.stats["consecutive_failures"] == 0
+    lag = agent.lag()
+    assert lag["sync_transport_errors"] == {"ConnectionError": 1}
+    assert lag["sync_consecutive_failures"] == 0
+
+
+def test_transport_partition_keeps_failing_with_counts(tmp_path):
+    agent = _sync_agent(tmp_path, interval_sec=0.1)
+    with inject("transport.partition"):
+        for _ in range(3):
+            assert "error" in agent.sync_once()
+    assert agent.stats["transport_errors"] == {"ConnectionError": 3}
+    assert agent.stats["consecutive_failures"] == 3
+
+
+def test_backoff_doubles_caps_and_jitters(tmp_path):
+    agent = _sync_agent(tmp_path, interval_sec=1.0, backoff_jitter=0.0)
+    assert agent._backoff_delay(0) == 1.0
+    assert agent._backoff_delay(1) == 1.0
+    assert agent._backoff_delay(3) == 4.0
+    assert agent._backoff_delay(100) == 32.0  # capped at interval * 32
+    jittered = _sync_agent(tmp_path / "j", interval_sec=1.0,
+                           backoff_jitter=0.25, rng=random.Random(0))
+    delays = {jittered._backoff_delay(3) for _ in range(8)}
+    assert len(delays) > 1  # jitter de-synchronizes retries
+    assert all(4.0 <= d <= 5.0 for d in delays)
+
+
+def test_sync_status_exposes_error_classes(tmp_path):
+    from repro.obs.metrics import get_registry, set_registry
+
+    old = set_registry(MetricsRegistry())
+    try:
+        agent = _sync_agent(tmp_path, interval_sec=0.1)
+        with inject("transport.partition"):
+            agent.sync_once()
+        status = agent.replica.status(agent.transport)
+        assert status["counters"]["fleet_transport_errors"] == {
+            "ConnectionError": 1}
+    finally:
+        set_registry(old)
+
+
+# ---------------------------------------------------------------------------
+# guarded background campaigns
+# ---------------------------------------------------------------------------
+
+
+def test_background_tuner_hardens_campaigns_and_skips_banned_configs(tmp_path):
+    from repro.dispatch import BackgroundTuner, register
+
+    crash_log = []
+
+    def _guard_eval(cfg):
+        if cfg["s"] == 32:
+            crash_log.append(dict(cfg))
+            raise RuntimeError("hot loop")
+        return EvalResult(1.0 / cfg["s"], True, {})
+
+    register("toy_guarded", builder=lambda cfg: lambda x: x * cfg["s"],
+             space=lambda target="host": _space(),
+             make_evaluator=lambda factory: _guard_eval)
+    store = TuningStore(str(tmp_path / "store"))
+    # pre-ban the config the campaign would otherwise publish (s=16,t=4 is
+    # the best non-crashing config): the publish must fall to the next-best
+    store.quarantine(TuningRecord("toy_guarded", ((4,),), "host",
+                                  {"s": 16, "t": 4}, 1.0), reason="drift:9.9x")
+    tuner = BackgroundTuner(store, max_evals=24, n_initial=6, seed=11,
+                            harden=HardenPolicy(deadline_sec=10.0))
+    fut = tuner.submit("toy_guarded", ((4,),), "host", space=_space(),
+                       evaluator=_guard_eval)
+    rec = fut.result(timeout=60)
+    tuner.shutdown()
+    assert not tuner.errors
+    assert rec is not None
+    assert rec.config != {"s": 16, "t": 4}, "banned config must not republish"
+    assert store.get("toy_guarded", ((4,),), "host").config == rec.config
+    if crash_log:  # the crashing region was explored and absorbed as data
+        assert rec.config["s"] != 32
