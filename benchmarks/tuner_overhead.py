@@ -11,7 +11,9 @@ n ∈ {50, 100, 200} observations for all four learners and writes
 ``benchmarks.common.bench_meta``) plus ``BENCH_tuner_overhead.obs.jsonl``, an
 ``repro.obs`` metrics snapshot with ``bench_{ask,tell,ask_batch}_seconds``
 histograms labeled per learner — so the speedup from vectorizing the
-surrogate stack is a tracked number rather than a claim.
+surrogate stack is a tracked number rather than a claim. A tiny synthetic
+cascade rides along so the snapshot also carries the repro.fidelity
+screen/promote counters and the feasibility-pruning count (``n_pruned``).
 
 Usage::
 
@@ -123,6 +125,40 @@ def time_learner(learner: str, n_obs: int, repeats: int, batch: int,
     }
 
 
+def time_cascade(registry: MetricsRegistry, seed: int = 1234) -> dict:
+    """One tiny synthetic cascade so the overhead snapshot also carries the
+    repro.fidelity counters (``fidelity_screened_total`` /
+    ``fidelity_promoted_total``), the per-rung campaign latency histograms,
+    and a non-zero feasibility-pruning count (``n_pruned``) — the tuner's
+    full telemetry surface in one artifact."""
+    from repro.core.plopper import EvalResult
+    from repro.fidelity import CascadeCampaign, FidelityLadder, Rung
+    from repro.obs.metrics import get_registry, set_registry
+
+    space = make_space(seed)
+    ladder = FidelityLadder([
+        Rung(0, "cost", lambda c: EvalResult(1e-3 * objective(c), True, {}),
+             budget=24, promote=4),
+        Rung(1, "hw", lambda c: EvalResult(objective(c), True, {}), budget=8),
+    ])
+    prev = get_registry()
+    set_registry(registry)  # campaigns bind the process registry at build
+    try:
+        res = CascadeCampaign(
+            space, ladder, seed=seed, n_initial=6, kernel="synthetic",
+            feasibility=lambda c: int(c["t_l1"]) <= 1024).run()
+    finally:
+        set_registry(prev)
+    return {
+        "screened": res.stats["screened"],
+        "promoted": res.stats["promoted"],
+        "hw_evals": res.hw_evals,
+        "n_pruned": sum(r.timings.get("n_pruned", 0) for r in res.rungs),
+        "ask_sec": res.timings["ask_sec"],
+        "tell_sec": res.timings["tell_sec"],
+    }
+
+
 def run(learners, sizes, repeats, batch, out, seed=1234):
     # every ask/tell lands in one registry as bench_{ask,tell,ask_batch}_seconds
     # histograms labeled (learner, n_obs) — the same snapshot format the rest
@@ -143,6 +179,11 @@ def run(learners, sizes, repeats, batch, out, seed=1234):
                   f"ask(batch{batch})={per_n[str(n_obs)][f'ask_batch{batch}_sec'] * 1e3:.2f}ms "
                   f"tell={per_n[str(n_obs)]['tell_sec'] * 1e6:.1f}us", flush=True)
         results["learners"][learner] = per_n
+    results["cascade"] = time_cascade(registry, seed)
+    print(f"[cascade] screened={results['cascade']['screened']} "
+          f"promoted={results['cascade']['promoted']} "
+          f"hw_evals={results['cascade']['hw_evals']} "
+          f"n_pruned={results['cascade']['n_pruned']}", flush=True)
     snapshot = registry.snapshot()
     results["obs"] = summarize_histograms(snapshot)
     write_bench_json(out, results)

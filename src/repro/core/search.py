@@ -126,17 +126,36 @@ class BayesianSearch:
         self.n_initial = max(1, n_initial - self.n_priors) if self.n_priors else n_initial
 
     def _encode_priors(self, records):
-        X, y = [], []
+        """Encode prior (config, objective) pairs as virtual observations.
+
+        A config may appear more than once — a multi-fidelity cascade
+        (repro.fidelity) observes the same schedule at several rungs. Priors
+        are deduped by canonical config key so a config contributes exactly
+        one training row: callers list records in ascending fidelity order,
+        and the *last* (highest-fidelity) objective wins, at the first
+        occurrence's row position so the prior-row layout stays stable.
+        Configs already recorded in the DB are dropped entirely — a resumed
+        campaign's real observation at the current fidelity would otherwise
+        be double-counted against its own lower-rung prior.
+        """
+        by_key: dict[tuple, tuple[np.ndarray, float]] = {}
         for cfg, obj in records:
             try:  # foreign configs (other space revisions) are skipped, not fatal
                 self.space.validate(cfg)
-                X.append(self.space.encode(cfg))
-                y.append(float(obj))
+                if self.db.contains(cfg):
+                    continue
+                # dict insertion order keeps the first occurrence's position;
+                # assignment keeps the last occurrence's (highest-rung) value
+                key = config_key(cfg)
+                enc = by_key[key][0] if key in by_key else self.space.encode(cfg)
+                by_key[key] = (enc, float(obj))
             except Exception:
                 continue
-        if not X:
+        if not by_key:
             return None, None
-        return np.stack(X), np.array(y)
+        X = np.stack([enc for enc, _ in by_key.values()])
+        y = np.array([obj for _, obj in by_key.values()])
+        return X, y
 
     # GP is the learner that does NOT consult the DB to re-select on duplicates
     @property

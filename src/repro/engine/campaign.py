@@ -69,11 +69,23 @@ class Campaign:
         warm_start_records: list[tuple[Mapping[str, Any], float]] | None = None,
         callback: Callable[[Record], None] | None = None,
         feasibility: Callable[[Mapping[str, Any]], bool] | None = None,
+        rung: int | None = None,
     ):
         if executor is None and evaluator is None:
             raise ValueError("Campaign needs an evaluator or an executor")
         self._owns_executor = executor is None
         self.learner = learner.upper()
+        # rung-aware contract (repro.fidelity): a campaign running as one
+        # rung of a multi-fidelity cascade carries its rung level. Every
+        # record's info gains {"rung": r}, the campaign_* metrics gain a
+        # rung label (per-rung latency histograms), and timings reports the
+        # level. With rung=None (every pre-fidelity caller) nothing changes:
+        # labels, info dicts, and RNG consumption are byte-identical, which
+        # is what keeps single-rung q=1 trajectories pinned to the paper.
+        self.rung = rung
+        self._labels = {"learner": self.learner}
+        if rung is not None:
+            self._labels["rung"] = int(rung)
         # obs integration: per-phase latencies land in the process registry
         # (campaign_{ask,tell,wait,evaluate}_seconds{learner=}) alongside the
         # plain `timings` dict below, and each phase opens a trace span —
@@ -102,6 +114,8 @@ class Campaign:
         # scoring — 0 unless a feasibility predicate was supplied.
         self.timings = {"ask_sec": 0.0, "tell_sec": 0.0, "wait_sec": 0.0,
                         "n_asks": 0, "n_tells": 0, "n_pruned": 0}
+        if rung is not None:
+            self.timings["rung"] = int(rung)
 
     # -- introspection -----------------------------------------------------------
 
@@ -132,50 +146,55 @@ class Campaign:
         """Wrap the evaluator so each evaluation is a trace span and a
         ``campaign_evaluate_seconds`` observation (runs on executor worker
         threads; shard-local recording keeps it lock-free)."""
-        metrics, learner = self._metrics, self.learner
+        metrics, labels = self._metrics, self._labels
 
         def evaluate(cfg):
             t0 = time.perf_counter()
             try:
-                with obs_span("campaign.evaluate", learner=learner):
+                with obs_span("campaign.evaluate", **labels):
                     return evaluator(cfg)
             finally:
                 metrics.observe("campaign_evaluate_seconds",
-                                time.perf_counter() - t0, learner=learner)
+                                time.perf_counter() - t0, **labels)
 
         return evaluate
 
     def _tell(self, config: Mapping[str, Any], result: EvalResult) -> None:
+        if self.rung is not None:
+            # rung-stamped records: the cascade (and anyone reading the
+            # JSONL) can attribute each observation to its fidelity level
+            result = EvalResult(result.objective, result.ok,
+                                {**result.info, "rung": self.rung})
         t0 = time.perf_counter()
-        with obs_span("campaign.tell", learner=self.learner):
+        with obs_span("campaign.tell", **self._labels):
             rec = self.search.tell(config, result)
         dt = time.perf_counter() - t0
         self.timings["tell_sec"] += dt
         self.timings["n_tells"] += 1
-        self._metrics.observe("campaign_tell_seconds", dt, learner=self.learner)
+        self._metrics.observe("campaign_tell_seconds", dt, **self._labels)
         if self.callback:
             self.callback(rec)
 
     def _tell_skipped(self, config: Mapping[str, Any]) -> None:
         t0 = time.perf_counter()
-        with obs_span("campaign.tell", learner=self.learner, skipped=True):
+        with obs_span("campaign.tell", skipped=True, **self._labels):
             rec = self.search.tell_skipped(config)
         dt = time.perf_counter() - t0
         self.timings["tell_sec"] += dt
         self.timings["n_tells"] += 1
-        self._metrics.observe("campaign_tell_seconds", dt, learner=self.learner)
+        self._metrics.observe("campaign_tell_seconds", dt, **self._labels)
         if self.callback:
             self.callback(rec)
 
     def _ask(self, n: int) -> list[dict]:
         t0 = time.perf_counter()
-        with obs_span("campaign.ask", learner=self.learner, n=n):
+        with obs_span("campaign.ask", n=n, **self._labels):
             batch = self.search.ask(n)
         dt = time.perf_counter() - t0
         self.timings["ask_sec"] += dt
         self.timings["n_asks"] += 1
         self.timings["n_pruned"] = self.search.n_pruned
-        self._metrics.observe("campaign_ask_seconds", dt, learner=self.learner)
+        self._metrics.observe("campaign_ask_seconds", dt, **self._labels)
         return batch
 
     def _run_warm_start(self) -> None:
@@ -246,7 +265,7 @@ class Campaign:
                 dt = time.perf_counter() - t0
                 self.timings["wait_sec"] += dt
                 self._metrics.observe("campaign_wait_seconds", dt,
-                                      learner=self.learner)
+                                      **self._labels)
                 for fut in [f for f in order if f in done]:
                     cfg = inflight.pop(fut)
                     keys_inflight.discard(config_key(cfg))

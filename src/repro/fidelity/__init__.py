@@ -1,0 +1,24 @@
+"""repro.fidelity — multi-fidelity cascade campaigns with top-k promotion.
+
+A declarative :class:`FidelityLadder` (analytic cost model → reduced-shape
+proxy timing → full hardware timing) plus a :class:`CascadeCampaign` that
+screens a wide configuration pool on the cheap rungs and promotes only the
+top-k to the next — successive-halving budgets — while every rung's
+observations feed the surrogate as calibrated priors. See
+``repro-fidelity audit`` for the rank-correlation contract that decides
+which kernels may screen analytically.
+"""
+
+from repro.fidelity.calibrate import RungCalibration, pairs_from_records
+from repro.fidelity.cascade import CascadeCampaign, CascadeResult
+from repro.fidelity.ladder import FidelityLadder, Rung, default_ladder
+
+__all__ = [
+    "CascadeCampaign",
+    "CascadeResult",
+    "FidelityLadder",
+    "Rung",
+    "RungCalibration",
+    "default_ladder",
+    "pairs_from_records",
+]

@@ -1,0 +1,138 @@
+"""Rank-correlation audit: does the cost model order configs like hardware?
+
+Rung 0 of the fidelity ladder screens with the analytic cost model, so the
+cascade's whole premise is that the model's *ordering* (not its absolute
+scale — calibration handles that) agrees with measured timing. This module
+makes that a checkable contract: sample configurations, score each with the
+cost model and with wall-clock timing at the same problem dims, and report
+the Spearman rank correlation ρ. Kernels whose ρ clears the threshold are
+safe to screen analytically (``screen_ok``); weak kernels are flagged so a
+cascade over them leans on the proxy rung instead.
+
+``repro-fidelity audit`` exposes this as a CLI; the pinned regression test
+(`tests/test_fidelity.py`) holds the matmul-family kernels to a minimum ρ
+so a cost-model regression that scrambles ordering fails CI rather than
+silently degrading every cascade.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["spearman_rho", "audit_kernel", "audit_kernels", "DEFAULT_RHO_MIN"]
+
+# below this the cost model is no better than a weak shuffle — don't screen
+DEFAULT_RHO_MIN = 0.2
+
+
+def spearman_rho(x: Sequence[float], y: Sequence[float]) -> float:
+    """Spearman rank correlation without scipy: average-rank both vectors
+    (ties share the mean of their rank block), then Pearson on the ranks.
+    Returns NaN for fewer than 3 pairs or a degenerate (constant) vector."""
+    x = np.asarray(x, dtype=float)
+    y = np.asarray(y, dtype=float)
+    if x.size < 3 or x.size != y.size:
+        return float("nan")
+
+    def ranks(v: np.ndarray) -> np.ndarray:
+        order = np.argsort(v, kind="stable")
+        r = np.empty(v.size, dtype=float)
+        r[order] = np.arange(1, v.size + 1, dtype=float)
+        # average ties so equal scores carry equal rank
+        for val in np.unique(v):
+            mask = v == val
+            if mask.sum() > 1:
+                r[mask] = r[mask].mean()
+        return r
+
+    rx, ry = ranks(x), ranks(y)
+    sx, sy = rx.std(), ry.std()
+    if sx < 1e-12 or sy < 1e-12:
+        return float("nan")
+    return float(np.mean((rx - rx.mean()) * (ry - ry.mean())) / (sx * sy))
+
+
+def audit_kernel(
+    kernel: str,
+    *,
+    n_samples: int = 10,
+    seed: int = 7,
+    dims: tuple | None = None,
+    target: str = "host",
+    repeats: int = 1,
+    warmup: int = 1,
+    rho_min: float = DEFAULT_RHO_MIN,
+    measure: Callable[[Mapping], float] | None = None,
+) -> dict:
+    """Audit one kernel: cost-model score vs measured time over a fixed-seed
+    sample of its configuration space, both at the same ``dims`` (default:
+    the reduced proxy dims, so the audit is cheap enough for CI).
+
+    ``measure`` injects the ground-truth scorer (``config -> seconds``) —
+    tests use synthetic measurements; the default wall-clocks the host
+    variant. Configs the cost model rejects (VMEM-infeasible) or whose
+    measurement fails are dropped from the correlation and counted in
+    ``n_dropped``.
+    """
+    from repro.core.plopper import TimingEvaluator
+    from repro.kernels.problems import PROXY_DIMS, bench_problem, make_cost_evaluator
+    from repro.kernels.spaces import kernel_space
+
+    if dims is None:
+        from repro.kernels.problems import BENCH_DIMS
+
+        dims = PROXY_DIMS.get(kernel, BENCH_DIMS[kernel])
+    dims = tuple(dims)
+    cost = make_cost_evaluator(kernel, dims)
+    if measure is None:
+        timer = TimingEvaluator(bench_problem(kernel, dims),
+                                repeats=repeats, warmup=warmup)
+
+        def measure(cfg, _timer=timer):
+            res = _timer(cfg)
+            return float(res.objective) if res.ok else float("nan")
+
+    space = kernel_space(kernel, target=target, seed=seed)
+    rng = np.random.default_rng(seed)
+    configs = space.sample_configurations(n_samples, rng)
+
+    cost_scores, times, dropped = [], [], 0
+    for cfg in configs:
+        c = cost(cfg)
+        if not c.ok or not np.isfinite(c.objective):
+            dropped += 1
+            continue
+        t = float(measure(cfg))
+        if not np.isfinite(t) or t <= 0:
+            dropped += 1
+            continue
+        cost_scores.append(float(c.objective))
+        times.append(t)
+
+    rho = spearman_rho(cost_scores, times)
+    return {
+        "kernel": kernel,
+        "dims": list(dims),
+        "target": target,
+        "n_sampled": len(configs),
+        "n_paired": len(times),
+        "n_dropped": dropped,
+        "rho": None if np.isnan(rho) else round(rho, 4),
+        "rho_min": rho_min,
+        "screen_ok": bool(not np.isnan(rho) and rho >= rho_min),
+    }
+
+
+def audit_kernels(
+    kernels: Sequence[str] | None = None,
+    **kwargs,
+) -> list[dict]:
+    """Audit every ``fidelity_ready`` kernel (or an explicit subset), in
+    sorted order so reports and tests are stable."""
+    from repro.kernels.cost import KERNEL_COST_FNS
+
+    if kernels is None:
+        kernels = sorted(KERNEL_COST_FNS)
+    return [audit_kernel(k, **kwargs) for k in kernels]

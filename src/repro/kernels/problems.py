@@ -37,8 +37,11 @@ __all__ = [
     "BENCH_PROBLEMS",
     "DEFAULTS_TPU",
     "LARGE_SHAPES",
+    "PROXY_DIMS",
     "bench_problem",
     "dims_from_signature",
+    "fidelity_ready",
+    "fidelity_readiness",
     "make_cost_evaluator",
     "problem_signature_for",
     "register_cost_backend",
@@ -72,6 +75,23 @@ LARGE_SHAPES = {
     "matmul": (2000, 2300, 2600),
 }
 
+# reduced-shape proxy sizes (repro.fidelity rung 1): the same kernels at
+# roughly half the linear problem dims (an eighth of the work for the cubic
+# kernels), so a proxy evaluation costs a fraction of the full bench timing
+# while preserving the schedule landscape's ordering well enough to screen.
+# heat3d additionally cuts tsteps (a pure multiplier on config ranking).
+PROXY_DIMS = {
+    "syr2k": (120, 100),
+    "mm3": (100, 90, 80, 75, 85),
+    "lu": (128,),
+    "heat3d": (24, 4),
+    "covariance": (150, 120),
+    "floyd_warshall": (120,),
+    "flash_attention": (2, 64, 64, 64),
+    "decode_attention": (4, 2, 64, 64),
+    "matmul": (128, 96, 112),
+}
+
 DEFAULTS_TPU = {
     "syr2k": dict(bi=128, bj=128, bk=128),
     "mm3": dict(bm=128, bn=128, bk=128),
@@ -85,14 +105,16 @@ DEFAULTS_TPU = {
 }
 
 
-def bench_problem(name: str):
-    """Variant factory for ``name`` at :data:`BENCH_DIMS` sizes — the thing a
-    :class:`~repro.core.plopper.TimingEvaluator` wall-clocks (backend B1)."""
+def bench_problem(name: str, dims: tuple | None = None):
+    """Variant factory for ``name`` — the thing a
+    :class:`~repro.core.plopper.TimingEvaluator` wall-clocks (backend B1).
+    Defaults to :data:`BENCH_DIMS` sizes; pass ``dims`` explicitly (e.g.
+    :data:`PROXY_DIMS`) for the fidelity ladder's reduced-shape proxy rung."""
     from repro.kernels import model_kernels as MK
     from repro.kernels import ref as R
     from repro.kernels import variants as V
 
-    dims = BENCH_DIMS[name]
+    dims = BENCH_DIMS[name] if dims is None else tuple(dims)
     if name == "heat3d":
         return V.heat3d_host(R.init_heat3d(dims[0]), tsteps=dims[1])
     if name == "flash_attention":
@@ -156,6 +178,26 @@ def dims_from_signature(kernel: str, signature) -> tuple:
         (M, K), (_, N) = signature[0], signature[1]
         return (M, K, N)
     raise KeyError(f"unknown kernel {kernel!r}")
+
+
+def fidelity_ready(kernel: str) -> bool:
+    """True when ``kernel`` can participate in the fidelity ladder's rung 0:
+    an analytic cost-model entry exists to screen with. Kernels without one
+    can still cascade over the timing rungs, but pay hardware (or proxy
+    hardware) for every screen."""
+    from repro.kernels.cost import KERNEL_COST_FNS
+
+    return kernel in KERNEL_COST_FNS
+
+
+def fidelity_readiness() -> dict[str, bool]:
+    """``kernel -> fidelity_ready`` over every dispatch-registered kernel —
+    the machine-readable coverage map ``repro-analyze space`` publishes, so a
+    kernel registered for dispatch but missing a cost-model entry (and thus
+    unable to join rung 0) is a reviewable fact rather than a silent gap."""
+    from repro.dispatch.registry import registered
+
+    return {name: fidelity_ready(name) for name in registered()}
 
 
 def make_cost_evaluator(kernel: str, dims: tuple | None = None) -> Callable:

@@ -85,7 +85,11 @@ def _audit_kernel(kernel: str, target: str, dims: tuple, samples: int,
 
 
 def cmd_space(args) -> int:
-    from repro.kernels.problems import BENCH_DIMS, LARGE_SHAPES
+    from repro.kernels.problems import (
+        BENCH_DIMS,
+        LARGE_SHAPES,
+        fidelity_readiness,
+    )
 
     kernels = [args.kernel] if args.kernel else sorted(BENCH_DIMS)
     rows = []
@@ -96,7 +100,18 @@ def cmd_space(args) -> int:
                                   args.samples, args.seed))
         rows.append(_audit_kernel(kernel, "cost", LARGE_SHAPES[kernel],
                                   args.samples, args.seed))
-    out = {"samples_per_space": args.samples, "seed": args.seed, "audit": rows}
+    # cost-model coverage (repro.fidelity): a dispatch-registered kernel
+    # without a cost-model entry cannot screen on the cascade's analytic
+    # rung — surface it as a reviewable fact, machine-readable per kernel
+    coverage = fidelity_readiness()
+    for r in rows:
+        r["fidelity_ready"] = coverage.get(r["kernel"], False)
+    out = {"samples_per_space": args.samples, "seed": args.seed, "audit": rows,
+           "fidelity": {
+               "coverage": coverage,
+               "missing_cost_model": sorted(
+                   k for k, ok in coverage.items() if not ok),
+           }}
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as fh:
@@ -105,15 +120,20 @@ def cmd_space(args) -> int:
         print(json.dumps(out, indent=2))
     else:
         hdr = (f"{'kernel':<16} {'target':<6} {'infeasible':>10} "
-               f"{'pathological':>12}  top codes")
+               f"{'pathological':>12} {'fidelity':>8}  top codes")
         print(hdr)
         print("-" * len(hdr))
         for r in rows:
             top = ", ".join(f"{c}({n})" for c, n
                             in list(r["codes"].items())[:3]) or "-"
+            ready = "ready" if r["fidelity_ready"] else "NO-COST"
             print(f"{r['kernel']:<16} {r['target']:<6} "
                   f"{r['infeasible_fraction']:>9.1%} "
-                  f"{r['pathological_fraction']:>11.1%}  {top}")
+                  f"{r['pathological_fraction']:>11.1%} {ready:>8}  {top}")
+        missing = out["fidelity"]["missing_cost_model"]
+        if missing:
+            print(f"fidelity: {len(missing)} dispatch-registered kernel(s) "
+                  f"lack a cost model: {', '.join(missing)}")
     return 0
 
 

@@ -18,6 +18,13 @@ the store's nearest tuned config (by log-scale shape distance) is evaluated
 first and its neighbors seed the surrogate, so a warmed campaign reaches the
 prior optimum in a fraction of the cold-start budget. --store STORE_DIR
 publishes this campaign's winner back (both flags may name the same dir).
+
+--cascade runs a repro.fidelity multi-fidelity cascade instead of a flat
+campaign: a wide pool is screened on the analytic cost model, the top-k
+re-timed at reduced proxy dims, and only the survivors measured at full
+size (--rung-budgets / --promote shape the ladder). With --db, each rung
+checkpoints under <db>/rung<level>/ and --resume continues with exactly the
+remaining per-rung budgets.
 """
 
 from __future__ import annotations
@@ -57,10 +64,26 @@ def main(argv=None) -> int:
                          "acquisition pool (repro.analyze feasibility rules; "
                          "off by default — pruning changes fixed-seed "
                          "trajectories)")
+    ap.add_argument("--cascade", action="store_true",
+                    help="multi-fidelity cascade (repro.fidelity): screen on "
+                         "the analytic cost model, re-time a reduced proxy "
+                         "shape, and spend full timings only on promoted "
+                         "top-k configs")
+    ap.add_argument("--rung-budgets", default=None, metavar="B0,B1[,B2]",
+                    help="per-rung evaluation budgets, bottom-up (2 entries "
+                         "= cost->hw, 3 = cost->proxy->hw; default 64,16,8)")
+    ap.add_argument("--promote", default=None, metavar="K1[,K2]",
+                    help="top-k promoted from each non-top rung "
+                         "(default: half the next rung's budget)")
     args = ap.parse_args(argv)
 
     if args.resume and not args.db:
         ap.error("--resume requires --db (the checkpoint to resume from)")
+    if args.cascade and args.backend == "cost":
+        ap.error("--cascade needs a timed backend above the analytic model; "
+                 "--backend cost IS the cascade's rung 0")
+    if (args.rung_budgets or args.promote) and not args.cascade:
+        ap.error("--rung-budgets/--promote only apply with --cascade")
 
     if args.backend == "host":
         evaluator = TimingEvaluator(bench_problem(args.kernel), repeats=2, warmup=1)
@@ -82,7 +105,7 @@ def main(argv=None) -> int:
         else:
             print("warm-start: store has no compatible record; cold start")
 
-    if args.resume:
+    if args.resume and not args.cascade:
         from repro.core.database import PerformanceDatabase
         k = len(PerformanceDatabase(args.db).records)
         print(f"resume: {k} record(s) checkpointed, "
@@ -97,11 +120,37 @@ def main(argv=None) -> int:
             args.kernel, dims=dims,
             target="host" if args.backend == "host" else "cost")
 
-    res = autotune(space, evaluator, max_evals=args.max_evals,
-                   learner=args.learner, seed=args.seed, db_path=args.db,
-                   parallel=args.parallel,
-                   warm_start=warm_cfgs, warm_start_records=warm_recs,
-                   feasibility=feasibility)
+    cascade_stats = None
+    if args.cascade:
+        from repro.fidelity import CascadeCampaign, default_ladder
+
+        budgets = tuple(int(x) for x in
+                        (args.rung_budgets or "64,16,8").split(","))
+        promote = tuple(int(x) for x in args.promote.split(",")) \
+            if args.promote else None
+        ladder = default_ladder(args.kernel, budgets=budgets, promote=promote)
+        if args.resume:
+            from repro.core.database import PerformanceDatabase
+            import os
+            for rung in ladder:
+                k = len(PerformanceDatabase(
+                    os.path.join(args.db, f"rung{rung.level}")).records)
+                print(f"resume: rung {rung.level} ({rung.name}) has {k} "
+                      f"record(s), {max(0, rung.budget - k)} remaining")
+        cres = CascadeCampaign(
+            space, ladder, db_root=args.db, learner=args.learner,
+            seed=args.seed, parallel=args.parallel,
+            warm_start=warm_cfgs, warm_start_records=warm_recs,
+            feasibility=feasibility, kernel=args.kernel).run()
+        print(cres.summary())
+        res = cres.rungs[-1]   # the hardware rung: the answer + what we publish
+        cascade_stats = cres.stats
+    else:
+        res = autotune(space, evaluator, max_evals=args.max_evals,
+                       learner=args.learner, seed=args.seed, db_path=args.db,
+                       parallel=args.parallel,
+                       warm_start=warm_cfgs, warm_start_records=warm_recs,
+                       feasibility=feasibility)
     if feasibility is not None and res.timings:
         print(f"feasibility: pruned {res.timings.get('n_pruned', 0)} "
               f"statically-infeasible candidate(s) from the acquisition pool")
@@ -114,12 +163,15 @@ def main(argv=None) -> int:
             n_evals=len(res.db), source=f"cli:{args.db or 'ephemeral'}"))
 
     print(res.summary())
-    print(json.dumps({
+    out = {
         "best_config": res.best.config,
         "best_objective_sec": res.best.objective,
         "found_at_eval": res.best.index,
         "importance": importance_report(res.db),
-    }, indent=2, default=str))
+    }
+    if cascade_stats is not None:
+        out["cascade"] = cascade_stats
+    print(json.dumps(out, indent=2, default=str))
     return 0
 
 

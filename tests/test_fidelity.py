@@ -1,0 +1,511 @@
+"""repro.fidelity: ladder validation, calibration, cascade semantics,
+resume, prior dedup, and the pinned cost-model rank-correlation contract."""
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core.database import PerformanceDatabase
+from repro.core.plopper import EvalResult
+from repro.core.search import BayesianSearch
+from repro.core.space import Categorical, ConfigurationSpace, Ordinal, config_key
+from repro.engine import Campaign
+from repro.fidelity import (
+    CascadeCampaign,
+    FidelityLadder,
+    Rung,
+    RungCalibration,
+    default_ladder,
+    pairs_from_records,
+)
+from repro.fidelity.audit import audit_kernel, spearman_rho
+from repro.obs.metrics import MetricsRegistry, get_registry, set_registry
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "fidelity_recorded.json")
+
+
+def toy_space(seed=1):
+    cs = ConfigurationSpace(seed=seed)
+    cs.add_hyperparameters([
+        Ordinal("a", (1, 2, 4, 8, 16), default=4),
+        Ordinal("b", (1, 2, 4, 8, 16), default=4),
+    ])
+    return cs
+
+
+def true_obj(cfg):
+    return (np.log2(cfg["a"]) - 3) ** 2 + (np.log2(cfg["b"]) - 1) ** 2 + 0.1
+
+
+def make_eval(scale, power=1.0):
+    def evaluate(cfg):
+        return EvalResult(scale * true_obj(cfg) ** power, True, {})
+    return evaluate
+
+
+def toy_ladder(budgets=(30, 10, 6), promote=(6, 3)):
+    return FidelityLadder([
+        Rung(0, "cost", make_eval(0.001, 1.1), budget=budgets[0],
+             promote=promote[0]),
+        Rung(1, "proxy", make_eval(0.1), budget=budgets[1],
+             promote=promote[1]),
+        Rung(2, "hw", make_eval(1.0), budget=budgets[2]),
+    ])
+
+
+# -- ladder ----------------------------------------------------------------------
+
+
+class TestLadder:
+    def test_validates_shape(self):
+        ev = make_eval(1.0)
+        with pytest.raises(ValueError, match="budget"):
+            Rung(0, "cost", ev, budget=0)
+        with pytest.raises(ValueError, match="ascending"):
+            FidelityLadder([Rung(1, "a", ev, 4, 2), Rung(0, "b", ev, 4)])
+        with pytest.raises(ValueError, match="unique"):
+            FidelityLadder([Rung(0, "a", ev, 4, 2), Rung(1, "a", ev, 4)])
+        with pytest.raises(ValueError, match="promotes nothing"):
+            FidelityLadder([Rung(0, "a", ev, 4, 0), Rung(1, "b", ev, 4)])
+        with pytest.raises(ValueError, match="cannot promote"):
+            FidelityLadder([Rung(0, "a", ev, 4, 5), Rung(1, "b", ev, 8)])
+        with pytest.raises(ValueError, match="can only evaluate"):
+            FidelityLadder([Rung(0, "a", ev, 8, 6), Rung(1, "b", ev, 4)])
+
+    def test_top_and_describe(self):
+        ladder = toy_ladder()
+        assert ladder.top.name == "hw"
+        desc = ladder.describe()
+        assert [d["budget"] for d in desc] == [30, 10, 6]
+        assert [d["promote"] for d in desc] == [6, 3, 0]
+
+    def test_default_ladder_shapes(self):
+        l3 = default_ladder("matmul", budgets=(64, 16, 8))
+        assert [r.name for r in l3] == ["cost", "proxy", "hw"]
+        l2 = default_ladder("matmul", budgets=(32, 8))
+        assert [r.name for r in l2] == ["cost", "hw"]
+        assert l2[0].promote == max(2, 8 // 2)
+
+    def test_default_ladder_requires_cost_model(self):
+        with pytest.raises(KeyError, match="fidelity_ready"):
+            default_ladder("no_such_kernel")
+
+
+# -- calibration -----------------------------------------------------------------
+
+
+class TestCalibration:
+    def test_recovers_log_affine_mapping(self):
+        # high = 10 * low^0.5 exactly; the fit must invert it
+        c = RungCalibration(min_pairs=3)
+        rng = np.random.default_rng(0)
+        for low in rng.uniform(1e-4, 1e-1, size=12):
+            c.update(low, 10.0 * low ** 0.5)
+        d = c.describe()
+        assert d["n_pairs"] == 12
+        assert abs(d["scale"] - 0.5) < 1e-6
+        assert abs(d["bias"] - 10.0) < 1e-6
+        assert abs(c.apply(1e-2) - 10.0 * 1e-1) < 1e-6
+
+    def test_bias_only_below_min_pairs(self):
+        c = RungCalibration(min_pairs=3)
+        c.update(0.001, 0.05)
+        d = c.describe()
+        assert d["scale"] == 1.0
+        assert abs(d["bias"] - 50.0) < 1e-9
+        assert abs(c.apply(0.002) - 0.1) < 1e-9
+
+    def test_identity_without_pairs(self):
+        c = RungCalibration()
+        assert c.apply(0.123) == 0.123
+        assert c.describe() == {"n_pairs": 0, "bias": 1.0, "scale": 1.0}
+
+    def test_rejects_unusable_pairs(self):
+        c = RungCalibration()
+        assert not c.update(float("nan"), 1.0)
+        assert not c.update(1.0, float("inf"))
+        assert not c.update(-1.0, 1.0)
+        assert not c.update(0.0, 1.0)
+        assert c.n_pairs == 0
+
+    def test_pairs_from_records_joins_by_config(self):
+        lo, hi = PerformanceDatabase(), PerformanceDatabase()
+        lo.add({"a": 1, "b": 2}, 0.001)
+        lo.add({"a": 2, "b": 2}, 0.002)
+        lo.add({"a": 4, "b": 4}, 0.004)
+        hi.add({"a": 2, "b": 2}, 0.2)
+        hi.add({"a": 1, "b": 2}, 0.1)
+        hi.add({"a": 8, "b": 8}, 0.8)  # unmatched: no low-rung observation
+        pairs = pairs_from_records(lo.records, hi.records)
+        assert pairs == [(0.002, 0.2), (0.001, 0.1)]
+
+
+# -- the cascade -----------------------------------------------------------------
+
+
+class TestCascade:
+    def test_finds_optimum_with_few_top_rung_evals(self):
+        res = CascadeCampaign(toy_space(), toy_ladder(), seed=42,
+                              n_initial=5).run()
+        assert res.best.config == {"a": 8, "b": 2}
+        assert res.hw_evals == 6
+        assert res.stats["screened"] == 40       # rungs below the top
+        assert res.stats["promoted"] == 9        # 6 + 3
+        names = [s["name"] for s in res.stats["rungs"]]
+        assert names == ["cost", "proxy", "hw"]
+
+    def test_records_stamped_with_rung(self):
+        res = CascadeCampaign(toy_space(), toy_ladder(), seed=42,
+                              n_initial=5).run()
+        for i, rung_res in enumerate(res.rungs):
+            assert all(r.info.get("rung") == i for r in rung_res.db.records
+                       if r.status == "ok")
+            assert rung_res.timings.get("rung") == i
+
+    def test_fixed_seed_replay_identical(self):
+        runs = [CascadeCampaign(toy_space(), toy_ladder(), seed=42,
+                                n_initial=5).run() for _ in range(2)]
+        for a, b in zip(runs[0].rungs, runs[1].rungs):
+            assert [(r.config, r.objective) for r in a.db.records] == \
+                [(r.config, r.objective) for r in b.db.records]
+        assert runs[0].stats["calibration"] == runs[1].stats["calibration"]
+
+    def test_calibration_learned_from_promotions(self):
+        res = CascadeCampaign(toy_space(), toy_ladder(), seed=42,
+                              n_initial=5).run()
+        c0, c1 = res.stats["calibration"]
+        # rung0 -> rung1: high = 0.1*t vs low = 1e-3*t^1.1 — slope 1/1.1
+        assert c0["n_pairs"] >= 3
+        assert abs(c0["scale"] - 1 / 1.1) < 0.05
+        # rung1 -> rung2 is exactly 10x: pure bias, unit scale
+        assert abs(c1["bias"] - 10.0) < 0.5
+        assert abs(c1["scale"] - 1.0) < 0.05
+
+    def test_obs_counters(self):
+        registry = MetricsRegistry()
+        prev = get_registry()
+        set_registry(registry)
+        try:
+            CascadeCampaign(toy_space(), toy_ladder(), seed=42, n_initial=5,
+                            kernel="toy").run()
+        finally:
+            set_registry(prev)
+        counters = registry.snapshot()["counters"]
+        screened = [c for c in counters
+                    if c["name"] == "fidelity_screened_total"]
+        promoted = [c for c in counters
+                    if c["name"] == "fidelity_promoted_total"]
+        assert sum(c["value"] for c in screened) == 46   # every rung counts
+        assert sum(c["value"] for c in promoted) == 9
+        assert any(c["labels"].get("rung") == "0" for c in screened)
+        assert all(c["labels"].get("kernel") == "toy" for c in screened)
+
+    def test_warm_start_records_seed_top_rung(self):
+        # external ground-truth priors flow into the top rung unchanged
+        priors = [({"a": 8, "b": 2}, 0.1)]
+        cc = CascadeCampaign(toy_space(), toy_ladder(), seed=42, n_initial=5,
+                             warm_start_records=priors)
+        got = cc.run()
+        assert got.best.config == {"a": 8, "b": 2}
+        top_priors = cc._priors_for(2)
+        assert top_priors[-1] == ({"a": 8, "b": 2}, 0.1)
+
+    def test_single_rung_matches_plain_campaign(self):
+        # a one-rung ladder is exactly a flat campaign: same records
+        ladder = FidelityLadder([Rung(0, "hw", make_eval(1.0), budget=12)])
+        cres = CascadeCampaign(toy_space(), ladder, seed=9, n_initial=5).run()
+        flat = Campaign(toy_space(), make_eval(1.0), max_evals=12,
+                        seed=9, n_initial=5).run()
+        assert [(r.config, r.objective) for r in cres.rungs[0].db.records] == \
+            [(r.config, r.objective) for r in flat.db.records]
+
+
+class TestCascadeResume:
+    def test_resume_exact_remaining_budgets_and_replay(self, tmp_path):
+        def fresh():
+            return CascadeCampaign(toy_space(), toy_ladder(),
+                                   db_root=str(tmp_path / "A"),
+                                   seed=42, n_initial=5)
+
+        full = fresh().run()
+
+        # simulate a kill mid-rung-1: rung0 complete, rung1 truncated to 4
+        # records, rung2 never started
+        B = tmp_path / "B"
+        shutil.copytree(tmp_path / "A" / "rung0", B / "rung0")
+        os.makedirs(B / "rung1")
+        src = (tmp_path / "A" / "rung1" / "results.jsonl").read_text()
+        (B / "rung1" / "results.jsonl").write_text(
+            "".join(src.splitlines(keepends=True)[:4]))
+
+        resumed = CascadeCampaign(toy_space(), toy_ladder(), db_root=str(B),
+                                  seed=42, n_initial=5).run()
+        fresh_counts = [s["screened"] for s in resumed.stats["rungs"]]
+        assert fresh_counts == [0, 6, 6]  # exactly the remaining budgets
+        for a, b in zip(full.rungs, resumed.rungs):
+            assert [(r.config, r.objective) for r in a.db.records] == \
+                [(r.config, r.objective) for r in b.db.records]
+        assert resumed.best.config == full.best.config
+
+    def test_completed_cascade_is_a_noop_on_rerun(self, tmp_path):
+        root = str(tmp_path / "db")
+        CascadeCampaign(toy_space(), toy_ladder(), db_root=root,
+                        seed=42, n_initial=5).run()
+        again = CascadeCampaign(toy_space(), toy_ladder(), db_root=root,
+                                seed=42, n_initial=5).run()
+        assert all(s["screened"] == 0 for s in again.stats["rungs"])
+        assert again.best.config == {"a": 8, "b": 2}
+
+
+# -- warm_start_records dedup (the double-counting fix) --------------------------
+
+
+class TestPriorDedup:
+    def test_duplicate_configs_collapse_to_highest_fidelity(self):
+        cfg_a, cfg_b = {"a": 1, "b": 2}, {"a": 4, "b": 8}
+        records = [
+            (cfg_a, 0.001),   # rung 0 estimate
+            (cfg_b, 0.002),
+            (cfg_a, 0.110),   # rung 1: same config, better fidelity
+            (cfg_a, 0.100),   # rung 2: highest fidelity — must win
+        ]
+        s = BayesianSearch(toy_space(), prior_records=records, seed=1)
+        assert s.n_priors == 2                      # not 4
+        # first-occurrence row order, last-occurrence (highest-rung) value
+        assert s._prior_y.tolist() == [0.100, 0.002]
+
+    def test_db_recorded_configs_dropped_from_priors(self):
+        db = PerformanceDatabase()
+        db.add({"a": 1, "b": 2}, 0.09)
+        records = [({"a": 1, "b": 2}, 0.001), ({"a": 4, "b": 8}, 0.002)]
+        s = BayesianSearch(toy_space(), prior_records=records, seed=1, db=db)
+        assert s.n_priors == 1                      # the DB one dropped
+        assert s._prior_y.tolist() == [0.002]
+
+    def test_invalid_prior_configs_skipped(self):
+        records = [({"a": 3, "b": 2}, 0.5),         # 3 not in the Ordinal
+                   ({"a": 2, "b": 2}, 0.4)]
+        s = BayesianSearch(toy_space(), prior_records=records, seed=1)
+        assert s.n_priors == 1
+
+
+# -- rung-aware Campaign contract ------------------------------------------------
+
+
+class TestRungAwareCampaign:
+    def test_rung_none_leaves_records_untouched(self):
+        res = Campaign(toy_space(), make_eval(1.0), max_evals=8,
+                       seed=3, n_initial=4).run()
+        assert all("rung" not in r.info for r in res.db.records)
+        assert "rung" not in res.timings
+
+    def test_rung_label_does_not_change_trajectory(self):
+        plain = Campaign(toy_space(), make_eval(1.0), max_evals=10,
+                         seed=3, n_initial=4).run()
+        runged = Campaign(toy_space(), make_eval(1.0), max_evals=10,
+                          seed=3, n_initial=4, rung=2).run()
+        assert [r.config for r in plain.db.records] == \
+            [r.config for r in runged.db.records]
+        assert [r.objective for r in plain.db.records] == \
+            [r.objective for r in runged.db.records]
+        assert all(r.info.get("rung") == 2 for r in runged.db.records)
+        assert runged.timings["rung"] == 2
+
+
+# -- spearman + the pinned rank-correlation contract -----------------------------
+
+
+class TestSpearman:
+    def test_perfect_and_inverted(self):
+        assert spearman_rho([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+        assert spearman_rho([1, 2, 3, 4], [40, 30, 20, 10]) == pytest.approx(-1.0)
+
+    def test_ties_and_degenerate(self):
+        assert abs(spearman_rho([1, 1, 2, 2], [1, 1, 2, 2]) - 1.0) < 1e-12
+        assert np.isnan(spearman_rho([1, 1, 1], [1, 2, 3]))
+        assert np.isnan(spearman_rho([1, 2], [1, 2]))
+
+
+class TestPinnedRankCorrelation:
+    """Cost-model ordering vs *recorded* hardware timings: the fixture holds
+    measured proxy-dims timings per kernel; the test recomputes the (fully
+    deterministic) cost scores, so a cost-model change that scrambles the
+    ordering moves rho and fails here instead of silently degrading every
+    cascade's screen."""
+
+    @pytest.fixture(scope="class")
+    def recorded(self):
+        with open(FIXTURE) as fh:
+            return json.load(fh)
+
+    def test_every_fidelity_ready_kernel_recorded(self, recorded):
+        from repro.kernels.cost import KERNEL_COST_FNS
+        assert sorted(recorded["kernels"]) == sorted(KERNEL_COST_FNS)
+
+    def test_rho_reproduces_recorded_value(self, recorded):
+        from repro.kernels.problems import make_cost_evaluator
+        for kernel, entry in recorded["kernels"].items():
+            cost = make_cost_evaluator(kernel, tuple(entry["dims"]))
+            scores, measured = [], []
+            for row in entry["rows"]:
+                res = cost(row["config"])
+                assert res.ok, f"{kernel}: recorded config now infeasible"
+                scores.append(res.objective)
+                measured.append(row["measured_sec"])
+            rho = spearman_rho(scores, measured)
+            assert rho == pytest.approx(entry["rho"], abs=0.02), \
+                f"{kernel}: cost-model ordering drifted from the recording"
+
+    def test_strong_kernels_stay_above_threshold(self, recorded):
+        strong = {k for k, e in recorded["kernels"].items() if e["strong"]}
+        # the cascade's poster kernels must stay screenable
+        assert {"matmul", "mm3"} <= strong
+        for kernel in strong:
+            assert recorded["kernels"][kernel]["rho"] >= 0.2
+
+    def test_audit_kernel_with_injected_measure(self, recorded):
+        entry = recorded["kernels"]["matmul"]
+        table = {config_key(r["config"]): r["measured_sec"]
+                 for r in entry["rows"]}
+        # same seed/samples as the recording: every sampled config resolves
+        rep = audit_kernel("matmul", n_samples=recorded["samples"],
+                           seed=recorded["seed"], dims=tuple(entry["dims"]),
+                           measure=lambda c: table.get(config_key(c),
+                                                       float("nan")))
+        assert rep["screen_ok"]
+        assert rep["rho"] == pytest.approx(entry["rho"], abs=0.02)
+
+
+# -- coverage audit + CLI plumbing -----------------------------------------------
+
+
+class TestCoverageAudit:
+    def test_fidelity_readiness_covers_registry(self):
+        from repro.dispatch.registry import registered
+        from repro.kernels.problems import fidelity_readiness
+        cov = fidelity_readiness()
+        assert set(cov) == set(registered())
+        assert all(isinstance(v, bool) for v in cov.values())
+        assert cov["matmul"] is True
+
+    def test_analyze_space_emits_fidelity_flags(self, capsys):
+        from repro.launch.analyze import main
+        rc = main(["space", "--kernel", "syr2k", "--samples", "8", "--json"])
+        assert rc == 0
+        out = json.loads(capsys.readouterr().out)
+        assert all("fidelity_ready" in row for row in out["audit"])
+        assert "coverage" in out["fidelity"]
+        assert out["fidelity"]["coverage"]["syr2k"] is True
+
+    def test_fidelity_cli_show(self, capsys):
+        from repro.launch.fidelity import main
+        rc = main(["show", "--kernel", "matmul"])
+        assert rc == 0
+        out = json.loads(capsys.readouterr().out)
+        assert out["fidelity_ready"] is True
+        assert [r["name"] for r in out["ladder"]] == ["cost", "proxy", "hw"]
+
+    def test_fidelity_cli_audit_plumbing(self, capsys, monkeypatch, tmp_path):
+        import repro.fidelity.audit as audit_mod
+        from repro.launch.fidelity import main
+        rows = {"matmul": dict(kernel="matmul", dims=[8], target="host",
+                               n_sampled=4, n_paired=4, n_dropped=0,
+                               rho=0.9, rho_min=0.2, screen_ok=True),
+                "lu": dict(kernel="lu", dims=[8], target="host",
+                           n_sampled=4, n_paired=4, n_dropped=0,
+                           rho=-0.1, rho_min=0.2, screen_ok=False)}
+        monkeypatch.setattr(audit_mod, "audit_kernel",
+                            lambda k, **kw: rows[k])
+        out_file = str(tmp_path / "audit.json")
+        rc = main(["audit", "--kernel", "matmul", "--json", "--out", out_file])
+        assert rc == 0
+        assert json.loads(capsys.readouterr().out)["weak_kernels"] == []
+        assert os.path.exists(out_file)
+        # --strict turns a weak kernel into a CI failure
+        rc = main(["audit", "--kernel", "lu", "--strict"])
+        assert rc == 1
+
+    def test_autotune_cli_rejects_bad_cascade_combos(self):
+        from repro.launch.autotune import main
+        with pytest.raises(SystemExit):
+            main(["--kernel", "syr2k", "--cascade", "--backend", "cost"])
+        with pytest.raises(SystemExit):
+            main(["--kernel", "syr2k", "--rung-budgets", "8,4"])
+
+
+# -- real-kernel cascade + BackgroundTuner wiring --------------------------------
+
+
+class TestRealKernelCascade:
+    def test_default_ladder_cascade_on_matmul_proxy(self):
+        # real cost model + real timing, at proxy dims so this stays fast
+        from repro.kernels.problems import PROXY_DIMS
+        from repro.kernels.spaces import kernel_space
+        ladder = default_ladder("matmul", budgets=(16, 4),
+                                dims=PROXY_DIMS["matmul"], repeats=1, warmup=1)
+        res = CascadeCampaign(kernel_space("matmul", target="host", seed=5),
+                              ladder, seed=5, n_initial=4,
+                              kernel="matmul").run()
+        assert res.best is not None
+        assert res.hw_evals <= 4
+        assert res.stats["rungs"][0]["screened"] == 16
+
+
+class TestBackgroundTunerCascade:
+    def _make(self, tmp_path, **kwargs):
+        from repro.dispatch.store import TuningStore
+        from repro.dispatch.background import BackgroundTuner
+        store = TuningStore(str(tmp_path / "store"))
+        return store, BackgroundTuner(store, max_evals=8, n_initial=4,
+                                      seed=11, **kwargs)
+
+    def test_cascade_campaign_publishes_and_counts(self, tmp_path):
+        from repro.kernels.problems import problem_signature_for
+        from repro.kernels.spaces import kernel_space
+        store, tuner = self._make(tmp_path, cascade=True,
+                                  cascade_budgets=(24, 4))
+        sig = problem_signature_for("matmul", "host")
+
+        def evaluator(cfg):  # synthetic "hardware": order matches cost rank
+            return EvalResult(1e-6 * (abs(int(cfg["bm"]) - 128) + 1), True, {})
+
+        fut = tuner.submit("matmul", sig, "host",
+                           space=kernel_space("matmul", seed=11),
+                           evaluator=evaluator)
+        assert fut is not None
+        rec = fut.result(timeout=120)
+        assert not tuner.errors, tuner.errors
+        assert rec is not None and rec.kernel == "matmul"
+        assert tuner.stats["cascade_campaigns"] == 1
+        assert tuner.stats["screened"] == 24
+        assert tuner.stats["promoted"] >= 2
+        assert len(store.records("matmul")) >= 1
+        tuner.shutdown()
+
+    def test_cost_backend_falls_back_to_flat(self, tmp_path):
+        from repro.kernels.problems import problem_signature_for
+        from repro.kernels.spaces import kernel_space
+        store, tuner = self._make(tmp_path, cascade=True)
+        sig = problem_signature_for("matmul", "cost")
+        fut = tuner.submit("matmul", sig, "cost",
+                           space=kernel_space("matmul", seed=11),
+                           evaluator=lambda cfg: EvalResult(
+                               1e-6 * int(cfg["bm"]), True, {}))
+        fut.result(timeout=120)
+        assert not tuner.errors, tuner.errors
+        assert tuner.stats["cascade_campaigns"] == 0
+        assert tuner.stats["campaigns"] == 1
+        tuner.shutdown()
+
+    def test_telemetry_surfaces_cascade_stats(self, tmp_path):
+        from repro.dispatch.service import DispatchService
+        store, tuner = self._make(tmp_path, cascade=True)
+        svc = DispatchService(store=store, tuner=tuner)
+        tel = svc.telemetry()
+        assert "screened" in tel and "promoted" in tel
+        assert "cascade_campaigns" in tel
+        tuner.shutdown()
